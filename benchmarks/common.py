@@ -1,0 +1,21 @@
+"""Shared benchmark utilities.  All benches print ``name,us_per_call,derived``
+CSV rows (one bench per paper table/figure) and run at CPU-feasible sizes;
+the TPU-target numbers come from the dry-run roofline (benchmarks/roofline_report)."""
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, repeats=10, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats
+
+
+def row(name, seconds, derived=""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

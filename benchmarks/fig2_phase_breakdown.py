@@ -1,0 +1,55 @@
+"""Paper Figure 2: FFTMatvec runtime breakdown by computational phase.
+
+Runs F and F* matvecs at a CPU-feasible slice of the paper's problem
+(paper: N_m=5000, N_d=100, N_t=1000) and times each phase separately
+(pad / FFT / SBGEMV+reorders / IFFT / unpad-reduce).  The paper finds
+SBGEMV dominates (~92%) — the derived column reports each phase's share.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FFTMatvec, PrecisionConfig, phase_callables, random_block_column
+from .common import row, time_fn
+
+N_T, N_D, N_M = 256, 50, 1250   # paper/4 in each dim (CPU)
+
+
+def bench(adjoint: bool):
+    key = jax.random.PRNGKey(0)
+    F_col = random_block_column(key, N_T, N_D, N_M, dtype=jnp.float64)
+    op = FFTMatvec.from_block_column(F_col)
+    fns = phase_callables(op, adjoint=adjoint)
+    if adjoint:
+        v = jax.random.normal(jax.random.PRNGKey(1), (N_D, N_T),
+                              dtype=jnp.float64)
+    else:
+        v = jax.random.normal(jax.random.PRNGKey(1), (N_M, N_T),
+                              dtype=jnp.float64)
+    # run the chain once to build phase inputs
+    inputs = {"pad": v}
+    order = ["pad", "fft", "gemv", "ifft", "reduce"]
+    outs = {}
+    x = v
+    for ph in order:
+        outs[ph] = fns[ph](x)
+        x = outs[ph]
+    times = {ph: time_fn(fns[ph], inputs_ph, repeats=3)
+             for ph, inputs_ph in
+             [("pad", v), ("fft", outs["pad"]), ("gemv", outs["fft"]),
+              ("ifft", outs["gemv"]), ("reduce", outs["ifft"])]}
+    total = sum(times.values())
+    name = "Fstar" if adjoint else "F"
+    for ph in order:
+        row(f"fig2/{name}_{ph}", times[ph],
+            f"share={times[ph] / total * 100:.1f}%")
+    row(f"fig2/{name}_total", total, f"Nt={N_T};Nd={N_D};Nm={N_M}")
+
+
+def main():
+    bench(adjoint=False)
+    bench(adjoint=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Render the dry-run roofline table (EXPERIMENTS.md §Roofline) from the
+JSON records written by repro.launch.dryrun."""
+
+import glob
+import json
+import os
+
+HEADERS = ["arch", "shape", "mesh", "tag", "compute_ms", "memory_ms",
+           "coll_ms", "dominant", "peak_GiB", "useful", "roofline_frac",
+           "what_moves_it"]
+
+
+def _advice(rec):
+    r = rec.get("roofline")
+    if not r:
+        return ""
+    dom = r["dominant"]
+    if dom == "compute":
+        u = rec.get("useful_flop_ratio", 1)
+        if u < 0.6:
+            return "cut non-model flops (causal-skip attn, remat=dots)"
+        return "near-roofline; overlap collectives"
+    if dom == "memory":
+        return "fuse attention into a Pallas flash kernel / bf16 activations"
+    return "shrink or overlap collectives (comm dtype, FSDP prefetch)"
+
+
+def load_records(out_dir="experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rec = json.load(open(path))
+        cell = rec.get("cell", {})
+        base = [cell.get("arch"), cell.get("shape"), cell.get("mesh"),
+                cell.get("tag")]
+        if "error" in rec:
+            rows.append(base + ["ERROR"] + [""] * 6 + [rec["error"][:60]])
+            continue
+        if "skipped" in rec:
+            rows.append(base + ["SKIP"] + [""] * 6 + [rec["skipped"][:60]])
+            continue
+        mem = rec["memory"]["peak_bytes"] / 2 ** 30
+        if "roofline" not in rec:
+            rows.append(base + ["", "", "", "compiled", f"{mem:.2f}", "", "",
+                                "production compile only (multi-pod pass)"])
+            continue
+        r = rec["roofline"]
+        rows.append(base + [
+            f"{r['compute_s'] * 1e3:.1f}", f"{r['memory_s'] * 1e3:.1f}",
+            f"{r['collective_s'] * 1e3:.1f}", r["dominant"], f"{mem:.2f}",
+            f"{rec.get('useful_flop_ratio', float('nan')):.2f}",
+            f"{rec.get('roofline_fraction', float('nan')):.3f}",
+            _advice(rec)])
+    return rows
+
+
+def main():
+    rows = load_records()
+    print(",".join(HEADERS))
+    for r in rows:
+        print(",".join("" if v is None else str(v) for v in r))
+
+
+def markdown(out_dir="experiments/dryrun"):
+    rows = load_records(out_dir)
+    lines = ["| " + " | ".join(HEADERS) + " |",
+             "|" + "---|" * len(HEADERS)]
+    for r in rows:
+        lines.append("| " + " | ".join("" if v is None else str(v)
+                                       for v in r) + " |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    main()

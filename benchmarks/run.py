@@ -1,0 +1,29 @@
+"""Benchmark harness: one bench per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV.  Figures map to the paper:
+  fig1  optimized short-wide (conj) transpose SBGEMV vs stock   (Fig. 1)
+  fig2  FFTMatvec per-phase runtime breakdown, F and F*         (Fig. 2)
+  fig3  mixed-precision Pareto front, 32 configs, tol 1e-7      (Fig. 3)
+  fig4  weak scaling w/ comm-aware partitioning + mixed prec    (Fig. 4)
+TPU-target roofline numbers live in benchmarks/roofline_report (reads the
+dry-run artifacts; EXPERIMENTS.md §Roofline).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)   # paper-faithful f64 ladder
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import fig1_sbgemv, fig2_phase_breakdown, fig3_pareto, fig4_scaling
+    fig1_sbgemv.main()
+    fig2_phase_breakdown.main()
+    fig3_pareto.main()
+    fig4_scaling.main()
+
+
+if __name__ == "__main__":
+    main()

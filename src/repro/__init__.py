@@ -1,0 +1,4 @@
+"""repro: mixed-precision FFT-based block-triangular Toeplitz matvec
+framework (FFTMatvec, SC-W '25) on JAX, with a multi-pod LM substrate."""
+
+__version__ = "1.0.0"

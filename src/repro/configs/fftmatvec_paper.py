@@ -1,0 +1,23 @@
+"""The paper's own workload: FFTMatvec p2o configs.
+
+Single-GPU/figure config: N_m=5,000, N_d=100, N_t=1,000 (Figs. 2-3).
+Weak-scaling config (Fig. 4): N_m = 5,000 * p for p devices.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTMatvecConfig:
+    name: str
+    N_t: int = 1000
+    N_d: int = 100
+    N_m: int = 5000
+    precision: str = "sssss"      # TPU-native baseline (paper: "ddddd")
+
+    def weak_scaled(self, p: int) -> "FFTMatvecConfig":
+        return dataclasses.replace(self, N_m=self.N_m * p,
+                                   name=f"{self.name}_p{p}")
+
+
+PAPER_SINGLE = FFTMatvecConfig(name="fftmatvec_paper")
+SMOKE = FFTMatvecConfig(name="fftmatvec_smoke", N_t=16, N_d=4, N_m=32)

@@ -1,0 +1,85 @@
+"""The assigned input-shape set (same four shapes for every LM arch) and
+ShapeDtypeStruct input builders for the dry-run.
+
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill (serve)
+  decode_32k   seq 32,768  global_batch 128   -> serve_step: ONE new token
+                                                 against a filled KV cache
+  long_500k    seq 524,288 global_batch 1     -> serve_step; requires
+                                                 sub-quadratic attention
+                                                 (SSM/hybrid only)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """long_500k only runs for sub-quadratic families (skip noted in
+    DESIGN.md §Arch-applicability)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "full attention is O(S^2); long-context decode skipped"
+    return True, ""
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract batch (ShapeDtypeStructs, no allocation) for a shape.
+
+    VLM: ``seq`` counts patch + text positions; the modality frontend is a
+    stub, so patch embeddings arrive precomputed.  Enc-dec: the audio
+    frontend stub supplies (B, enc_positions, d_model) frame embeddings and
+    ``seq`` is the decoder length."""
+    B, S = shape.batch, shape.seq
+    emb_dt = cfg.policy.c()
+    if shape.kind == "decode":
+        return {"tokens": _tok(B, 1)}
+    if cfg.family == "encdec":
+        batch = {"frames": jax.ShapeDtypeStruct((B, cfg.enc_positions,
+                                                 cfg.d_model), emb_dt),
+                 "tokens": _tok(B, S)}
+    elif cfg.family == "vlm":
+        batch = {"patch_embeds": jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), emb_dt),
+            "tokens": _tok(B, S - cfg.n_patches)}
+    else:
+        batch = {"tokens": _tok(B, S)}
+    if shape.kind == "train":
+        batch["labels"] = _tok(*batch["tokens"].shape)
+    return batch
+
+
+def input_shard_specs(cfg: ModelConfig, shape: ShapeSpec, *, dp,
+                      mesh_shape: dict) -> dict:
+    """Batch-dim sharding for the inputs (replicated when batch doesn't
+    divide the dp axes, e.g. long_500k's batch of 1)."""
+    from repro.models.transformer import _shard
+    b_ax = _shard(shape.batch, dp, mesh_shape)
+    return {k: P(b_ax, *([None] * (v.ndim - 1)))
+            for k, v in input_specs(cfg, shape).items()}

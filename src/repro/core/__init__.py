@@ -1,0 +1,24 @@
+"""Core FFTMatvec library — the paper's contribution as composable JAX modules.
+
+Public API:
+    PrecisionConfig, MatvecOptions, FFTMatvec  — mixed-precision matvec (C1+C3)
+    choose_grid / paper_grid                   — comm-aware 2-D partitioning
+    pareto.measure_configs / pareto_front      — Pareto analysis (Fig. 3)
+    error_model.relative_error_bound           — paper eq. (6)
+    GaussianInverseProblem                     — Bayesian-inversion driver
+"""
+
+from .precision import (PrecisionConfig, all_configs, machine_eps,  # noqa: F401
+                        DOUBLE, SINGLE, TPU_BASELINE, TPU_FAST,
+                        PAPER_OPT_F, PAPER_OPT_FSTAR, PAPER_OPT_F_LARGE,
+                        TPU_OPT_F)
+from .fftmatvec import FFTMatvec, MatvecOptions, phase_callables  # noqa: F401
+from .toeplitz import (dense_from_block_column, dense_matvec,  # noqa: F401
+                       dense_rmatvec, fourier_block_column,
+                       random_block_column, random_unrepresentable,
+                       heat_equation_p2o)
+from .partition import choose_grid, paper_grid, matvec_comm_time, NetworkModel  # noqa: F401
+from .error_model import relative_error_bound, dominant_phase  # noqa: F401
+from .pareto import (ConfigRecord, measure_configs, pareto_front,  # noqa: F401
+                     optimal_config, format_table, rel_l2)
+from .hessian import GaussianInverseProblem  # noqa: F401

@@ -1,0 +1,75 @@
+"""First-order error model of the mixed-precision FFTMatvec (paper §3.2.1).
+
+Implements the paper's final bound, eq. (6):
+
+    ||dv5|| / ||v5|| <= kappa(F_hat) * [ c1 e1
+                                         + (cF ed + c2 e2 + c4 e4) log2(N_t)
+                                         + c3 e3 n_m
+                                         + c5 e5 log2(p_c) ]
+
+for the F matvec, with n_m = ceil(N_m / p_c); the F* bound replaces n_m by
+n_d = ceil(N_d / p_r) and p_c by p_r.  e_i is the unit roundoff of the
+precision used in phase i; c_i are O(1) algorithm constants; c1 = 0 when
+Phase 1 runs at (or above) the precision that represents the input exactly.
+"""
+
+from __future__ import annotations
+
+import math
+
+from .precision import PrecisionConfig, machine_eps
+
+
+def relative_error_bound(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
+                         p_r: int = 1, p_c: int = 1, *, adjoint: bool = False,
+                         kappa: float = 1.0, input_level: str = "d",
+                         constants: dict | None = None) -> float:
+    """Evaluate eq. (6).  ``input_level`` is the precision at which the
+    input vector is exactly representable (paper: double).  ``constants``
+    may override the O(1) factors c1..c5 and cF (default 1.0)."""
+    c = {"c1": 1.0, "c2": 1.0, "c3": 1.0, "c4": 1.0, "c5": 1.0, "cF": 1.0}
+    if constants:
+        c.update(constants)
+
+    e = {p: machine_eps(getattr(cfg, p)) for p in
+         ("pad", "fft", "gemv", "ifft", "reduce")}
+    e_setup = machine_eps(input_level)   # setup FFT of F runs at input level
+
+    # c1 = 0 if the pad/broadcast phase is lossless for the input.
+    lossless = machine_eps(cfg.pad) <= machine_eps(input_level)
+    c1 = 0.0 if lossless else c["c1"]
+
+    if adjoint:
+        n_local = math.ceil(N_d / max(p_r, 1))
+        p_red = max(p_r, 1)
+    else:
+        n_local = math.ceil(N_m / max(p_c, 1))
+        p_red = max(p_c, 1)
+
+    log_nt = math.log2(max(N_t, 2))
+    log_p = math.log2(p_red) if p_red > 1 else 0.0
+
+    return kappa * (c1 * e["pad"]
+                    + (c["cF"] * e_setup + c["c2"] * e["fft"]
+                       + c["c4"] * e["ifft"]) * log_nt
+                    + c["c3"] * e["gemv"] * n_local
+                    + c["c5"] * e["reduce"] * log_p)
+
+
+def dominant_phase(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
+                   p_r: int = 1, p_c: int = 1, *, adjoint: bool = False) -> str:
+    """Which phase contributes the largest term of eq. (6).  The paper:
+    'the dominant error term comes from the SBGEMV in Phase 3'."""
+    e = {p: machine_eps(getattr(cfg, p)) for p in
+         ("pad", "fft", "gemv", "ifft", "reduce")}
+    n_local = (math.ceil(N_d / max(p_r, 1)) if adjoint
+               else math.ceil(N_m / max(p_c, 1)))
+    p_red = max(p_r if adjoint else p_c, 1)
+    terms = {
+        "pad": e["pad"],
+        "fft": e["fft"] * math.log2(max(N_t, 2)),
+        "gemv": e["gemv"] * n_local,
+        "ifft": e["ifft"] * math.log2(max(N_t, 2)),
+        "reduce": e["reduce"] * (math.log2(p_red) if p_red > 1 else 0.0),
+    }
+    return max(terms, key=terms.get)

@@ -1,0 +1,295 @@
+"""FFTMatvec: the paper's 5-phase mixed-precision matvec pipeline (C1+C3).
+
+Phases (paper §2.4), for ``d = F m``:
+
+  1. broadcast + zero-pad the input block vector        (memory op)
+  2. batched FFT  m -> m_hat                            (XLA FFT)
+  3. block-diagonal matvec in Fourier space (SBGEMV)    (Pallas / XLA)
+  4. batched IFFT d_hat -> d_padded
+  5. unpad + reduction over the processor-grid rows
+
+plus the SOTI<->TOSI reorders between phases 2-3 and 3-4, which are pure
+memory ops executed at the *lower* of the adjacent phases' precisions
+(paper footnote 8).  The adjoint ``m = F* d`` runs the same phases with a
+conjugate-transpose SBGEMV and broadcast/reduce roles swapped.
+
+Every phase's precision comes from a :class:`PrecisionConfig`; casts are
+fused with the pad/unpad memory ops (``kernels.ops.pad_cast``).
+
+Distribution (paper §2.4, §3.7): a 2-D ``(row, col)`` device grid; rows
+shard N_d, cols shard N_m.  ``m`` lives sharded over cols / replicated
+over rows; ``d`` sharded over rows / replicated over cols.  For the F
+matvec the only collective is the Phase-5 ``psum`` over cols; for F* it is
+the Phase-1 broadcast over cols (materialized by SPMD when the input is
+not yet replicated) and a ``psum`` over rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.kernels import ops as kops
+from . import precision as prec
+from .precision import PrecisionConfig
+from .toeplitz import fourier_block_column
+
+
+@dataclasses.dataclass(frozen=True)
+class MatvecOptions:
+    """Static implementation knobs (perf levers, see EXPERIMENTS.md §Perf)."""
+    use_pallas: bool | str = False   # custom SBGEMV kernel ("auto" = dispatch)
+    interpret: bool = False          # Pallas interpret mode (CPU validation)
+    fuse_pad_cast: bool = False      # use the fused Pallas pad+cast kernels
+    block_n: int = 512               # SBGEMV column-tile size
+
+
+# ---------------------------------------------------------------------------
+# The five phases (single device / per-shard local compute).
+# All take SOTI/TOSI layouts as documented in toeplitz.py.
+# ---------------------------------------------------------------------------
+
+def phase1_pad(v, N_t: int, cfg: PrecisionConfig, opts: MatvecOptions):
+    """Zero-pad (R, N_t) -> (R, 2*N_t), cast to the pad level (fused)."""
+    return kops.pad_cast(v, 2 * N_t, cfg.phase_dtype("pad"),
+                         use_pallas=opts.fuse_pad_cast, interpret=opts.interpret)
+
+
+def phase2_fft(v_padded, cfg: PrecisionConfig):
+    """Batched rfft over the minor axis.  Returns split planes (R, K) at the
+    fft storage level; computes at >= f32 (complex lives only inside)."""
+    lvl = cfg.fft
+    x = v_padded.astype(prec.fft_compute_dtype(lvl))
+    v_hat = jnp.fft.rfft(x, axis=-1)
+    dt = prec.real_dtype(lvl)
+    return v_hat.real.astype(dt), v_hat.imag.astype(dt)
+
+
+def reorder_soti_to_tosi(re, im, level: str):
+    """(R, K) -> (K, R) transpose at the given (lowest-adjacent) level."""
+    dt = prec.real_dtype(level)
+    return re.astype(dt).T, im.astype(dt).T
+
+
+def reorder_tosi_to_soti(re, im, level: str):
+    dt = prec.real_dtype(level)
+    return re.astype(dt).T, im.astype(dt).T
+
+
+def phase3_gemv(F_re, F_im, x_re, x_im, cfg: PrecisionConfig,
+                opts: MatvecOptions, adjoint: bool):
+    """Fourier-space block-diagonal matvec: for every frequency bin k,
+    d_hat[k] = F_hat[k] @ m_hat[k]  (or F_hat[k]^H d_hat[k] for F*)."""
+    dt = prec.real_dtype(cfg.gemv)
+    mode = "H" if adjoint else "N"
+    return kops.sbgemv(F_re.astype(dt), F_im.astype(dt),
+                       x_re.astype(dt), x_im.astype(dt), mode,
+                       out_dtype=dt, use_pallas=opts.use_pallas,
+                       block_n=opts.block_n, interpret=opts.interpret)
+
+
+def phase4_ifft(re, im, N_t: int, cfg: PrecisionConfig):
+    """Batched irfft back to the time domain: planes (R, K) -> (R, 2*N_t)."""
+    lvl = cfg.ifft
+    cdt = prec.complex_dtype(lvl)
+    v_hat = re.astype(cdt) + 1j * im.astype(cdt)
+    v = jnp.fft.irfft(v_hat, n=2 * N_t, axis=-1)
+    return v.astype(prec.real_dtype(lvl))
+
+
+def phase5_unpad(v_padded, N_t: int, cfg: PrecisionConfig, opts: MatvecOptions):
+    """Unpad (R, 2*N_t) -> (R, N_t) + cast to the reduce level (fused)."""
+    return kops.unpad_cast(v_padded, N_t, cfg.phase_dtype("reduce"),
+                           use_pallas=opts.fuse_pad_cast,
+                           interpret=opts.interpret)
+
+
+# ---------------------------------------------------------------------------
+# Full local pipeline
+# ---------------------------------------------------------------------------
+
+def _local_matvec(F_re, F_im, m, N_t: int, cfg: PrecisionConfig,
+                  opts: MatvecOptions, adjoint: bool):
+    """The per-shard 5-phase pipeline (no collectives).  ``m`` is the local
+    SOTI input block vector; returns the local (partial) SOTI output at the
+    reduce level."""
+    v = phase1_pad(m, N_t, cfg, opts)                                 # ph 1
+    v_re, v_im = phase2_fft(v, cfg)                                   # ph 2
+    v_re, v_im = reorder_soti_to_tosi(v_re, v_im,
+                                      cfg.reorder_level("fft", "gemv"))
+    y_re, y_im = phase3_gemv(F_re, F_im, v_re, v_im, cfg, opts, adjoint)  # 3
+    y_re, y_im = reorder_tosi_to_soti(y_re, y_im,
+                                      cfg.reorder_level("gemv", "ifft"))
+    y = phase4_ifft(y_re, y_im, N_t, cfg)                             # ph 4
+    return phase5_unpad(y, N_t, cfg, opts)                            # ph 5a
+
+
+# ---------------------------------------------------------------------------
+# Public operator
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FFTMatvec:
+    """Block-triangular Toeplitz matvec operator.
+
+    Single-device by default; pass ``mesh`` (+ axis names) for the 2-D
+    processor-grid distributed version.  Input/output block vectors are in
+    SOTI layout: ``m`` (N_m, N_t), ``d`` (N_d, N_t).  I/O dtype follows the
+    paper: the working precision at entry/exit is the highest level in use
+    (f64 in paper mode, f32 TPU-native).
+    """
+
+    F_hat_re: jax.Array          # (K, N_d, N_m) TOSI, stored at gemv level
+    F_hat_im: jax.Array
+    N_t: int
+    precision: PrecisionConfig = PrecisionConfig()
+    opts: MatvecOptions = MatvecOptions()
+    mesh: Optional[Mesh] = None
+    row_axis: str = "row"
+    col_axis: str = "col"
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_block_column(cls, F_col, precision=PrecisionConfig(),
+                          opts=MatvecOptions(), mesh=None,
+                          row_axis="row", col_axis="col") -> "FFTMatvec":
+        """Phase-0 setup (always at the highest precision, paper §3.2.1),
+        storing F_hat at the gemv level."""
+        F_re, F_im = fourier_block_column(
+            F_col, dtype=prec.real_dtype(precision.gemv))
+        op = cls(F_re, F_im, F_col.shape[0], precision, opts, mesh,
+                 row_axis, col_axis)
+        if mesh is not None:
+            spec = P(None, row_axis, col_axis)
+            op = dataclasses.replace(
+                op,
+                F_hat_re=jax.device_put(F_re, NamedSharding(mesh, spec)),
+                F_hat_im=jax.device_put(F_im, NamedSharding(mesh, spec)))
+        return op
+
+    # -- shapes --------------------------------------------------------------
+    @property
+    def N_d(self) -> int:
+        return self.F_hat_re.shape[1]
+
+    @property
+    def N_m(self) -> int:
+        return self.F_hat_re.shape[2]
+
+    @property
+    def io_dtype(self):
+        return prec.real_dtype(self.precision.highest())
+
+    # -- single-device paths --------------------------------------------------
+    def _matvec_single(self, m):
+        y = _local_matvec(self.F_hat_re, self.F_hat_im, m, self.N_t,
+                          self.precision, self.opts, adjoint=False)
+        return y.astype(self.io_dtype)
+
+    def _rmatvec_single(self, d):
+        y = _local_matvec(self.F_hat_re, self.F_hat_im, d, self.N_t,
+                          self.precision, self.opts, adjoint=True)
+        return y.astype(self.io_dtype)
+
+    # -- distributed paths ----------------------------------------------------
+    def _matvec_sharded(self, m):
+        row, col = self._row, self.col_axis
+        cfg, opts, N_t, io_dtype = self.precision, self.opts, self.N_t, self.io_dtype
+
+        def body(F_re, F_im, m_loc):
+            part = _local_matvec(F_re, F_im, m_loc, N_t, cfg, opts,
+                                 adjoint=False)
+            # Phase 5b: reduction over the processor-grid row (over cols)
+            # at the reduce precision (lower-precision comm is a paper knob).
+            part = part.astype(prec.real_dtype(cfg.reduce))
+            return jax.lax.psum(part, col).astype(io_dtype)
+
+        return jax.shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(None, row, col), P(None, row, col), P(col, None)),
+            out_specs=P(row, None),
+        )(self.F_hat_re, self.F_hat_im, m)
+
+    @property
+    def _row(self):
+        """Row axis (None for the paper's p_r = 1 regime)."""
+        return self.row_axis if self.row_axis not in ((), None) else None
+
+    def _rmatvec_sharded(self, d):
+        row, col = self._row, self.col_axis
+        cfg, opts, N_t, io_dtype = self.precision, self.opts, self.N_t, self.io_dtype
+
+        def body(F_re, F_im, d_loc):
+            # Phase 1 broadcast: d arrives sharded over rows, replicated over
+            # cols (SPMD materializes the broadcast if it is not).
+            part = _local_matvec(F_re, F_im, d_loc, N_t, cfg, opts,
+                                 adjoint=True)
+            part = part.astype(prec.real_dtype(cfg.reduce))
+            if row is not None:
+                part = jax.lax.psum(part, row)
+            return part.astype(io_dtype)
+
+        return jax.shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(None, row, col), P(None, row, col), P(row, None)),
+            out_specs=P(col, None),
+        )(self.F_hat_re, self.F_hat_im, d)
+
+    # -- public API ------------------------------------------------------------
+    def matvec(self, m):
+        """d = F m.   m: (N_m, N_t) SOTI -> d: (N_d, N_t) SOTI."""
+        fn = self._matvec_sharded if self.mesh is not None else self._matvec_single
+        return fn(m)
+
+    def rmatvec(self, d):
+        """m = F* d.  d: (N_d, N_t) SOTI -> m: (N_m, N_t) SOTI."""
+        fn = self._rmatvec_sharded if self.mesh is not None else self._rmatvec_single
+        return fn(d)
+
+    def jitted(self):
+        """Jit-compiled (matvec, rmatvec) pair."""
+        return jax.jit(self.matvec), jax.jit(self.rmatvec)
+
+    # -- sharding helpers -------------------------------------------------------
+    def m_sharding(self):
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, P(self.col_axis, None))
+
+    def d_sharding(self):
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, P(self._row, None))
+
+
+# ---------------------------------------------------------------------------
+# Per-phase callables for the runtime-breakdown benchmark (paper Fig. 2)
+# ---------------------------------------------------------------------------
+
+def phase_callables(op: FFTMatvec, adjoint: bool = False):
+    """Separately jitted per-phase functions, keyed by the paper's phase
+    names, each consuming the previous phase's output."""
+    cfg, opts, N_t = op.precision, op.opts, op.N_t
+
+    def f1(v):
+        return phase1_pad(v, N_t, cfg, opts)
+
+    def f2(v):
+        return phase2_fft(v, cfg)
+
+    def f3(planes):
+        re, im = reorder_soti_to_tosi(*planes, cfg.reorder_level("fft", "gemv"))
+        y = phase3_gemv(op.F_hat_re, op.F_hat_im, re, im, cfg, opts, adjoint)
+        return reorder_tosi_to_soti(*y, cfg.reorder_level("gemv", "ifft"))
+
+    def f4(planes):
+        return phase4_ifft(*planes, N_t, cfg)
+
+    def f5(v):
+        return phase5_unpad(v, N_t, cfg, opts).astype(op.io_dtype)
+
+    return {"pad": jax.jit(f1), "fft": jax.jit(f2), "gemv": jax.jit(f3),
+            "ifft": jax.jit(f4), "reduce": jax.jit(f5)}

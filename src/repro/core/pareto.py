@@ -1,0 +1,115 @@
+"""Pareto-front analysis of mixed-precision configurations (paper §3.2, Fig. 3).
+
+For every per-phase precision configuration, measure (a) the relative L2
+error against the all-highest-precision baseline and (b) the matvec
+runtime; the Pareto front is the set of non-dominated (time, error)
+points, and the *optimal* configuration for an application is the fastest
+one whose error stays below the application's tolerance (set from the
+sensor noise level, paper §3.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fftmatvec import FFTMatvec, MatvecOptions
+from .precision import PrecisionConfig, all_configs
+
+
+@dataclasses.dataclass
+class ConfigRecord:
+    config: PrecisionConfig
+    rel_error: float
+    time_s: float
+    speedup: float = float("nan")   # vs the baseline config
+
+    @property
+    def prec(self) -> str:
+        return self.config.to_string()
+
+
+def _time_callable(fn: Callable, arg, repeats: int, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(arg))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(arg)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats
+
+
+def rel_l2(x, ref) -> float:
+    x64 = np.asarray(x, dtype=np.float64)
+    r64 = np.asarray(ref, dtype=np.float64)
+    denom = np.linalg.norm(r64)
+    return float(np.linalg.norm(x64 - r64) / (denom if denom else 1.0))
+
+
+def measure_configs(op_builder: Callable[[PrecisionConfig], FFTMatvec],
+                    v, configs: Iterable[PrecisionConfig] | None = None,
+                    *, adjoint: bool = False, baseline: str | None = None,
+                    repeats: int = 5) -> list[ConfigRecord]:
+    """Run every configuration, recording error vs the baseline config's
+    output and mean runtime over ``repeats`` (paper: 100 reps; tests use
+    fewer).  ``op_builder(cfg)`` must return a ready operator."""
+    configs = list(configs) if configs is not None else list(all_configs())
+    if baseline is None:
+        # highest level across configs ("h" < "s" < "d" — NOT lexicographic)
+        order = ("h", "s", "d")
+        baseline = max((c.highest() for c in configs), key=order.index)
+    base_cfg = PrecisionConfig(*([baseline] * 5))
+
+    def run(cfg: PrecisionConfig):
+        op = op_builder(cfg)
+        fn = jax.jit(op.rmatvec if adjoint else op.matvec)
+        out = jax.block_until_ready(fn(v))
+        t = _time_callable(fn, v, repeats)
+        return out, t
+
+    ref_out, base_t = run(base_cfg)
+    records = []
+    for cfg in configs:
+        if cfg == base_cfg:
+            records.append(ConfigRecord(cfg, 0.0, base_t, 1.0))
+            continue
+        out, t = run(cfg)
+        records.append(ConfigRecord(cfg, rel_l2(out, ref_out), t, base_t / t))
+    return records
+
+
+def pareto_front(records: Sequence[ConfigRecord]) -> list[ConfigRecord]:
+    """Non-dominated set: no other record is both faster and more accurate."""
+    front = []
+    for r in records:
+        dominated = any(
+            (o.time_s <= r.time_s and o.rel_error <= r.rel_error
+             and (o.time_s < r.time_s or o.rel_error < r.rel_error))
+            for o in records)
+        if not dominated:
+            front.append(r)
+    return sorted(front, key=lambda r: r.time_s)
+
+
+def optimal_config(records: Sequence[ConfigRecord],
+                   tolerance: float) -> ConfigRecord:
+    """Fastest configuration whose relative error stays below ``tolerance``
+    (the paper uses 1e-7 for the FP64/FP32 ladder)."""
+    ok = [r for r in records if r.rel_error <= tolerance]
+    if not ok:
+        raise ValueError(f"no configuration meets tolerance {tolerance}")
+    return min(ok, key=lambda r: r.time_s)
+
+
+def format_table(records: Sequence[ConfigRecord], front=None) -> str:
+    front_set = {id(r) for r in (front or [])}
+    lines = [f"{'prec':>6} {'rel_err':>12} {'time_ms':>10} {'speedup':>8} {'front':>6}"]
+    for r in sorted(records, key=lambda r: r.time_s):
+        lines.append(f"{r.prec:>6} {r.rel_error:>12.3e} {r.time_s * 1e3:>10.3f} "
+                     f"{r.speedup:>8.2f} {'*' if id(r) in front_set else '':>6}")
+    return "\n".join(lines)

@@ -1,0 +1,105 @@
+"""Communication-aware 2-D processor-grid partitioning (paper §2.4 / [44] §3.7).
+
+FFTMatvec runs on a ``p_r x p_c`` grid.  For small-to-moderate device
+counts a single row (``p_r = 1``) is optimal — the F matvec then has only
+the Phase-5 reduction and the F* matvec only the Phase-1 broadcast.  At
+scale those collectives span multiple network tiers (racks on Frontier,
+pods on TPU), and they are *latency-bound* (paper: 0.8 MB data-vector
+buffers against a 100 GB/s NIC).  The paper's fix — more processor-grid
+rows at 1,024+ GPUs (8 rows at 1-2k, 16 at 4k, >3x speedup) — amounts to
+a *hierarchical* blocking of the reduction: reduce within a row (one
+fast-domain group) first, then across rows (few slow-tier hops), instead
+of one flat log2(p)-deep tree where every hop pays slow-tier latency.
+
+This module models exactly that: a two-tier LogGP-style collective cost,
+a hierarchical reduce/broadcast built from the grid, and a brute-force
+grid search.  ``paper_grid`` returns the published Frontier grids.
+Constants default to TPU ICI (intra-pod) vs DCN (cross-pod) — the TPU
+analogue of the paper's intra-rack fabric vs Slingshot split.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    devices_per_tier: int = 512      # fast-domain size (rack / TPU 2-pod)
+    alpha_intra: float = 2e-6        # s per hop (ICI)
+    alpha_inter: float = 60e-6       # s per hop (DCN / cross-rack)
+    bw_intra: float = 5.0e10         # B/s per device (ICI ~50 GB/s/link)
+    bw_inter: float = 2.5e10         # B/s per device (DCN share)
+
+    def collective_cost(self, group: int, bytes_local: int,
+                        spans_tiers: bool) -> float:
+        """Tree/ring collective over ``group`` devices, ``bytes_local``
+        payload per device: log2(g) latency hops + (g-1)/g bandwidth."""
+        if group <= 1:
+            return 0.0
+        alpha = self.alpha_inter if spans_tiers else self.alpha_intra
+        bw = self.bw_inter if spans_tiers else self.bw_intra
+        return math.log2(group) * alpha + bytes_local * (group - 1) / group / bw
+
+
+def hierarchical_collective_time(p_r: int, p_c: int, bytes_local: int,
+                                 net: NetworkModel = NetworkModel()) -> float:
+    """Reduce (or broadcast) of a ``bytes_local`` buffer over all
+    p = p_r*p_c devices, blocked by the grid: within rows (contiguous ->
+    fast domain when p_c fits a tier) then across rows (slow tier).
+    ``p_r = 1`` degenerates to the flat collective."""
+    row_spans = p_c > net.devices_per_tier
+    cross_spans = p_r > 1 and (p_r * p_c) > net.devices_per_tier
+    return (net.collective_cost(p_c, bytes_local, row_spans)
+            + net.collective_cost(p_r, bytes_local, cross_spans))
+
+
+def matvec_comm_time(p_r: int, p_c: int, N_t: int, N_d: int, N_m: int,
+                     bytes_per_elem: int = 8,
+                     net: NetworkModel = NetworkModel()) -> float:
+    """Modeled communication of one F matvec + one F* matvec.
+
+    Models the paper's accounting: the *data-vector* collectives (F's
+    Phase-5 reduce, F*'s Phase-1 broadcast) are the scaling bottleneck —
+    0.8 MB buffers against multi-tier latency, i.e. latency-bound — and
+    the grid hierarchically blocks them.  (Our eq.-6 decomposition also
+    reduces parameter chunks over the p_r rows in F*; that term favors
+    small p_r and is excluded from grid *selection* to match [44] §3.7 —
+    noted in DESIGN.md §6.)"""
+    d_bytes = N_t * math.ceil(N_d / p_r) * bytes_per_elem
+    # F: phase-5 reduce of d; F*: phase-1 broadcast of d (same structure)
+    return 2.0 * hierarchical_collective_time(p_r, p_c, d_bytes, net)
+
+
+def choose_grid(p: int, N_t: int, N_d: int, N_m: int,
+                bytes_per_elem: int = 8,
+                net: NetworkModel = NetworkModel()) -> tuple[int, int]:
+    """Brute-force the divisor pairs of ``p`` for the cheapest modeled
+    comm.  Rows are capped at N_d (a row without sensors does no work).
+    Within a single fast domain the flat grid is already latency-cheap and
+    extra rows only add the F* parameter-chunk reduction (paper: p_r = 1
+    up to 512 GPUs), so the search starts above one tier."""
+    if p <= net.devices_per_tier:
+        return (1, p)
+    best, best_t = (1, p), float("inf")
+    for p_r in range(1, min(p, N_d) + 1):
+        if p % p_r:
+            continue
+        p_c = p // p_r
+        t = matvec_comm_time(p_r, p_c, N_t, N_d, N_m, bytes_per_elem, net)
+        if t < best_t - 1e-15:
+            best, best_t = (p_r, p_c), t
+    return best
+
+
+def paper_grid(p: int) -> tuple[int, int]:
+    """The grids the paper reports for Frontier (§4.2.2): one row for
+    <= 512 GPUs, 8 rows for 1,024-2,048, 16 rows for 4,096."""
+    if p <= 512:
+        p_r = 1
+    elif p <= 2048:
+        p_r = 8
+    else:
+        p_r = 16
+    return p_r, p // p_r

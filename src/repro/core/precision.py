@@ -1,0 +1,144 @@
+"""Per-phase precision configuration for the FFTMatvec pipeline (paper C3).
+
+The paper lets each of the five computational phases run in FP64 ("d") or
+FP32 ("s"); the 2^5 = 32 configurations are explored by a Pareto-front
+analysis.  On TPU there is no native FP64 datapath, so we generalize to a
+three-level ladder:
+
+    "d" -> float64   (paper-faithful; CPU / validation only)
+    "s" -> float32   (TPU high precision)
+    "h" -> bfloat16  (TPU low precision)
+
+A configuration is written exactly like the paper's runtime flag, e.g.
+``-prec dssdd`` -> ``PrecisionConfig.from_string("dssdd")``.  Complex data
+is carried as split re/im planes of the phase's *real* dtype (Pallas TPU
+has no complex dtype; the MXU is a real systolic array) — see DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterator, Sequence
+
+import jax.numpy as jnp
+
+PHASES = ("pad", "fft", "gemv", "ifft", "reduce")
+
+_LEVELS = ("h", "s", "d")  # ordered low -> high
+_REAL_DTYPE = {"d": jnp.float64, "s": jnp.float32, "h": jnp.bfloat16}
+# FFTs always *compute* in >= f32 (XLA FFT op supports f32/f64 only; TPU FFTs
+# are f32).  "h" phases compute f32 and store bf16 at phase boundaries.
+_FFT_COMPUTE_DTYPE = {"d": jnp.float64, "s": jnp.float32, "h": jnp.float32}
+_COMPLEX_DTYPE = {"d": jnp.complex128, "s": jnp.complex64, "h": jnp.complex64}
+
+# Unit roundoff per level (bf16: 8 mantissa bits incl. implicit -> 2^-8).
+MACHINE_EPS = {"d": 2.0 ** -53, "s": 2.0 ** -24, "h": 2.0 ** -8}
+
+
+def real_dtype(level: str):
+    return _REAL_DTYPE[level]
+
+
+def fft_compute_dtype(level: str):
+    return _FFT_COMPUTE_DTYPE[level]
+
+
+def complex_dtype(level: str):
+    return _COMPLEX_DTYPE[level]
+
+
+def machine_eps(level: str) -> float:
+    return MACHINE_EPS[level]
+
+
+def min_level(a: str, b: str) -> str:
+    """Lowest of two precision levels (paper: memory ops between phases run
+    at the lowest precision of the adjacent compute phases)."""
+    return a if _LEVELS.index(a) <= _LEVELS.index(b) else b
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionConfig:
+    """Precision level of each of the five FFTMatvec phases.
+
+    Phase order matches the paper: (1) broadcast+pad, (2) FFT, (3) SBGEMV,
+    (4) IFFT, (5) unpad+reduce.
+    """
+
+    pad: str = "d"
+    fft: str = "d"
+    gemv: str = "d"
+    ifft: str = "d"
+    reduce: str = "d"
+
+    def __post_init__(self):
+        for p in PHASES:
+            lvl = getattr(self, p)
+            if lvl not in _LEVELS:
+                raise ValueError(f"bad precision level {lvl!r} for phase {p!r}")
+
+    # -- paper-style string codec ------------------------------------------
+    @classmethod
+    def from_string(cls, s: str) -> "PrecisionConfig":
+        if len(s) != 5:
+            raise ValueError(f"precision string must have 5 chars, got {s!r}")
+        return cls(*s)
+
+    def to_string(self) -> str:
+        return "".join(getattr(self, p) for p in PHASES)
+
+    def levels(self) -> tuple[str, ...]:
+        return tuple(getattr(self, p) for p in PHASES)
+
+    # -- derived dtypes -----------------------------------------------------
+    def phase_dtype(self, phase: str):
+        return real_dtype(getattr(self, phase))
+
+    def reorder_level(self, before: str, after: str) -> str:
+        """Precision of the memory-only reorder between two compute phases."""
+        return min_level(getattr(self, before), getattr(self, after))
+
+    def highest(self) -> str:
+        idx = max(_LEVELS.index(getattr(self, p)) for p in PHASES)
+        return _LEVELS[idx]
+
+    def replace(self, **kw) -> "PrecisionConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def all_configs(levels: Sequence[str] = ("d", "s")) -> Iterator[PrecisionConfig]:
+    """Enumerate every per-phase configuration over the given levels.
+
+    ``levels=("d","s")`` reproduces the paper's 32 configurations;
+    ``levels=("s","h")`` is the TPU-native 32; all three levels -> 243.
+    """
+    for combo in itertools.product(levels, repeat=len(PHASES)):
+        yield PrecisionConfig(*combo)
+
+
+DOUBLE = PrecisionConfig.from_string("ddddd")
+SINGLE = PrecisionConfig.from_string("sssss")
+TPU_BASELINE = SINGLE                       # f32 everywhere (TPU-native high)
+TPU_FAST = PrecisionConfig.from_string("hhhhh")
+# The paper's Pareto-optimal configs (Fig. 3): F matvec computes FFT+SBGEMV in
+# low precision; F* matvec computes SBGEMV+IFFT in low precision.
+PAPER_OPT_F = PrecisionConfig.from_string("dssdd")
+PAPER_OPT_FSTAR = PrecisionConfig.from_string("ddssd")
+# >=512 GPUs on Frontier: also reduce in low precision (paper §C.1: "dssds").
+PAPER_OPT_F_LARGE = PrecisionConfig.from_string("dssds")
+TPU_OPT_F = PrecisionConfig.from_string("shhss")
+
+
+def cast_to(x, level: str):
+    """Cast an array (or None) to the real dtype of ``level``.
+
+    No-op when the dtype already matches — important so that fused
+    pad+cast kernels don't double-cast.
+    """
+    if x is None:
+        return None
+    dt = real_dtype(level)
+    if x.dtype == dt:
+        return x
+    return x.astype(dt)

@@ -1,0 +1,1 @@
+from .pipeline import SyntheticPipeline, PipelineState  # noqa: F401

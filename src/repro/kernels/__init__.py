@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (short-wide SBGEMV)
+and the fused pad/cast memory ops, with jit'd shape-dispatching wrappers
+(ops.py) and pure-jnp oracles (ref.py)."""
+
+from . import ops, ref  # noqa: F401

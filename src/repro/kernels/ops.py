@@ -1,0 +1,149 @@
+"""Jit'd wrappers + shape-heuristic dispatch for the Pallas kernels.
+
+This layer recreates the paper's rocBLAS *host dispatcher* integration: the
+optimized short-wide kernel was inserted into the rocBLAS dispatch function
+(with transition points set from benchmarking) so application call sites
+stayed unchanged.  Here, ``sbgemv``/``sbgemv_real`` pick between the XLA
+default lowering (einsum -> dot_general) and the custom Pallas kernel based
+on the matrix shape, and handle the padding to hardware-aligned shapes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref as _ref
+from . import pad_cast as _pad_cast
+from . import sbgemv as _sbgemv
+
+# Kernel transition point, in the spirit of the paper's benchmarking-derived
+# rocBLAS host-launcher thresholds: the custom kernel wins for "short and
+# wide" (m << n); the stock lowering is fine for squarish shapes.
+SHORT_WIDE_RATIO = 4
+
+
+def _pad_to(x, axis: int, multiple: int):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x, size
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad), size
+
+
+def use_custom_kernel(m: int, n: int, mode: str) -> bool:
+    """Shape heuristic (the 'host dispatcher')."""
+    return m * SHORT_WIDE_RATIO <= n and mode in ("N", "T", "H")
+
+
+def _sbgemv_xla_fused(A_re, A_im, x_re, x_im, mode: str):
+    """XLA path with the custom kernel's *traffic pattern*: stack the two
+    input-vector planes so each A plane is contracted ONCE against both
+    (one HBM read of A_re + A_im total, vs twice each for 4 independent
+    GEMVs), accumulating in f32 without materializing upcast copies of A.
+    Measured on the fftmatvec dry-run: memory term 12.45 -> ~5 ms/step."""
+    # accumulate at >= f32; f64 inputs keep full f64 accumulation (the
+    # paper-faithful ladder depends on it)
+    acc = jnp.float64 if A_re.dtype == jnp.float64 else jnp.float32
+    if mode == "N":
+        X = jnp.stack([x_re, x_im], axis=1)               # (B, 2, n)
+        R = jnp.einsum("bmn,bkn->bkm", A_re, X, preferred_element_type=acc)
+        I = jnp.einsum("bmn,bkn->bkm", A_im, X, preferred_element_type=acc)
+        return R[:, 0] - I[:, 1], R[:, 1] + I[:, 0]
+    X = jnp.stack([x_re, x_im], axis=1)                   # (B, 2, m)
+    R = jnp.einsum("bmn,bkm->bkn", A_re, X, preferred_element_type=acc)
+    I = jnp.einsum("bmn,bkm->bkn", A_im, X, preferred_element_type=acc)
+    if mode == "H":   # conj(A)^T x
+        return R[:, 0] + I[:, 1], R[:, 1] - I[:, 0]
+    return R[:, 0] - I[:, 1], R[:, 1] + I[:, 0]           # "T"
+
+
+def sbgemv(A_re, A_im, x_re, x_im, mode: str = "N", *, out_dtype=None,
+           use_pallas: bool | str = "auto", block_n: int = 512,
+           interpret: bool = False, xla_fused: bool = True):
+    """Strided-batched complex GEMV on split planes; dispatches between the
+    Pallas short-wide kernel and the XLA einsum lowering.
+
+    A planes (B, m, n); mode "N": x (B, n) -> y (B, m); "T"/"H": x (B, m)
+    -> y (B, n).  Returns (y_re, y_im) in ``out_dtype`` (default: A dtype).
+    """
+    B, m, n = A_re.shape
+    out_dtype = out_dtype or A_re.dtype
+    if A_re.dtype == jnp.float64:
+        use_pallas = False  # Pallas TPU has no f64; paper mode runs via XLA.
+    if use_pallas == "auto":
+        use_pallas = use_custom_kernel(m, n, mode)
+    if not use_pallas:
+        fn = _sbgemv_xla_fused if xla_fused else _ref.sbgemv_complex_ref
+        y_re, y_im = fn(A_re, A_im, x_re, x_im, mode)
+        return y_re.astype(out_dtype), y_im.astype(out_dtype)
+
+    bn = min(block_n, max(128, n))
+    # pad m to sublane multiples, n to a tile multiple (zero rows/cols
+    # contribute zero to the dots)
+    Ar, _ = _pad_to(A_re, 1, 8)
+    Ai, _ = _pad_to(A_im, 1, 8)
+    Ar, n0 = _pad_to(Ar, 2, bn)
+    Ai, _ = _pad_to(Ai, 2, bn)
+    if mode == "N":
+        xr, _ = _pad_to(x_re, 1, bn)
+        xi, _ = _pad_to(x_im, 1, bn)
+        y_re, y_im = _sbgemv.sbgemv_n_complex(Ar, Ai, xr, xi, block_n=bn,
+                                              interpret=interpret)
+        y_re, y_im = y_re[:, :m], y_im[:, :m]
+    else:
+        xr, _ = _pad_to(x_re, 1, 8)
+        xi, _ = _pad_to(x_im, 1, 8)
+        y_re, y_im = _sbgemv.sbgemv_th_complex(Ar, Ai, xr, xi,
+                                               conj=(mode == "H"),
+                                               block_n=bn, interpret=interpret)
+        y_re, y_im = y_re[:, :n0], y_im[:, :n0]
+    return y_re.astype(out_dtype), y_im.astype(out_dtype)
+
+
+def sbgemv_real(A, x, mode: str = "N", *, out_dtype=None,
+                use_pallas: bool | str = "auto", block_n: int = 512,
+                interpret: bool = False):
+    """Real strided-batched GEMV with the same dispatch logic."""
+    B, m, n = A.shape
+    out_dtype = out_dtype or A.dtype
+    if A.dtype == jnp.float64:
+        use_pallas = False
+    if use_pallas == "auto":
+        use_pallas = use_custom_kernel(m, n, mode)
+    if not use_pallas:
+        return _ref.sbgemv_real_ref(A, x, mode).astype(out_dtype)
+
+    bn = min(block_n, max(128, n))
+    A2, _ = _pad_to(A, 1, 8)
+    A2, n0 = _pad_to(A2, 2, bn)
+    if mode == "N":
+        x2, _ = _pad_to(x, 1, bn)
+        y = _sbgemv.sbgemv_n_real(A2, x2, block_n=bn, interpret=interpret)[:, :m]
+    else:
+        x2, _ = _pad_to(x, 1, 8)
+        y = _sbgemv.sbgemv_th_real(A2, x2, block_n=bn, interpret=interpret)[:, :n0]
+    return y.astype(out_dtype)
+
+
+def pad_cast(x, pad_to: int, out_dtype, *, use_pallas: bool = False,
+             interpret: bool = False):
+    """(R, T) -> (R, pad_to) fused zero-pad + cast (Phase-1 memory op)."""
+    if x.dtype == jnp.float64 or out_dtype == jnp.float64:
+        use_pallas = False
+    if not use_pallas:
+        return _ref.pad_cast_ref(x, pad_to, out_dtype)
+    x2, R0 = _pad_to(x, 0, 8)
+    return _pad_cast.pad_cast(x2, pad_to, out_dtype, interpret=interpret)[:R0]
+
+
+def unpad_cast(x, keep: int, out_dtype, *, use_pallas: bool = False,
+               interpret: bool = False):
+    """(R, P) -> (R, keep) fused unpad + cast (Phase-5 memory op)."""
+    if x.dtype == jnp.float64 or out_dtype == jnp.float64:
+        use_pallas = False
+    if not use_pallas:
+        return _ref.unpad_cast_ref(x, keep, out_dtype)
+    x2, R0 = _pad_to(x, 0, 8)
+    return _pad_cast.unpad_cast(x2, keep, out_dtype, interpret=interpret)[:R0]

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the semantics the kernels are validated against (interpret
+mode on CPU, sweeping shapes and dtypes in tests/test_kernels_*).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sbgemv_real_ref(A, x, mode: str = "N"):
+    """Strided-batched real GEMV.
+
+    A: (B, m, n).  mode "N": x (B, n) -> y (B, m);  mode "T": x (B, m) ->
+    y (B, n).  Accumulation in f32 (or f64 under x64 for f64 inputs).
+    """
+    acc = jnp.float64 if A.dtype == jnp.float64 else jnp.float32
+    if mode == "N":
+        y = jnp.einsum("bmn,bn->bm", A.astype(acc), x.astype(acc))
+    elif mode == "T":
+        y = jnp.einsum("bmn,bm->bn", A.astype(acc), x.astype(acc))
+    else:
+        raise ValueError(f"bad mode {mode!r}")
+    return y.astype(A.dtype)
+
+
+def sbgemv_complex_ref(A_re, A_im, x_re, x_im, mode: str = "N"):
+    """Strided-batched complex GEMV on split re/im planes.
+
+    modes: "N" (y = A x), "T" (y = A^T x), "H" (y = A^H x — the paper's
+    conjugate-transpose case).  Returns (y_re, y_im) in the input dtype.
+    """
+    acc = jnp.float64 if A_re.dtype == jnp.float64 else jnp.float32
+    Ar, Ai = A_re.astype(acc), A_im.astype(acc)
+    xr, xi = x_re.astype(acc), x_im.astype(acc)
+    if mode == "N":
+        y_re = jnp.einsum("bmn,bn->bm", Ar, xr) - jnp.einsum("bmn,bn->bm", Ai, xi)
+        y_im = jnp.einsum("bmn,bn->bm", Ar, xi) + jnp.einsum("bmn,bn->bm", Ai, xr)
+    elif mode == "T":
+        y_re = jnp.einsum("bmn,bm->bn", Ar, xr) - jnp.einsum("bmn,bm->bn", Ai, xi)
+        y_im = jnp.einsum("bmn,bm->bn", Ar, xi) + jnp.einsum("bmn,bm->bn", Ai, xr)
+    elif mode == "H":  # conj(A)^T x
+        y_re = jnp.einsum("bmn,bm->bn", Ar, xr) + jnp.einsum("bmn,bm->bn", Ai, xi)
+        y_im = jnp.einsum("bmn,bm->bn", Ar, xi) - jnp.einsum("bmn,bm->bn", Ai, xr)
+    else:
+        raise ValueError(f"bad mode {mode!r}")
+    return y_re.astype(A_re.dtype), y_im.astype(A_re.dtype)
+
+
+def pad_cast_ref(x, pad_to: int, out_dtype):
+    """Zero-pad the minor (time) axis to ``pad_to`` and cast: (..., T) ->
+    (..., pad_to).  Fused Phase-1 memory op."""
+    T = x.shape[-1]
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, pad_to - T)]
+    return jnp.pad(x.astype(out_dtype), pad)
+
+
+def unpad_cast_ref(x, keep: int, out_dtype):
+    """Slice the first ``keep`` entries of the minor axis and cast.  Fused
+    Phase-5 memory op."""
+    return x[..., :keep].astype(out_dtype)

@@ -1,0 +1,196 @@
+"""Pallas TPU kernel: strided-batched GEMV for short-wide matrices (paper C2).
+
+The paper's rocBLAS pathology: for batches of (m x n) matrices with
+m << n (N_d sensors << N_m parameters), the stock conjugate-transpose
+SBGEMV launches one gridblock per output element — n tiny blocks each
+doing a length-m dot product — destroying memory bandwidth.  Their fix
+tiles the *columns* of each matrix so a block computes a chunk of outputs,
+with vectorized loads, read/compute/write pipelining and warp-shuffle
+reductions.
+
+TPU adaptation (DESIGN.md §2.3): the failure mode on TPU is lane/sublane
+alignment rather than launch overhead, but the *insight* carries over —
+tile the long n axis, keep a whole (m x block_n) tile of A resident in
+VMEM, reduce inside fast memory, and pipeline HBM->VMEM loads against MXU
+compute (Pallas double-buffers grid steps automatically; batch and column
+grid axes are marked ``parallel``).  Complex data is carried as split
+re/im planes (no complex dtype on the MXU): each A tile is loaded ONCE
+and used for both the real and imaginary outputs — halving matrix traffic
+vs. four independent real GEMVs, which is the kernel's bandwidth win.
+
+All kernels accumulate in f32 (``preferred_element_type``) regardless of
+the plane dtype (bf16/f32); wrappers in ``ops.py`` handle padding to
+hardware-aligned shapes and output casts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_ACC = jnp.float32
+
+
+def _dot(a, b):
+    return jax.lax.dot(a, b, preferred_element_type=_ACC)
+
+
+# ---------------------------------------------------------------------------
+# Transpose / conjugate-transpose, complex: y = A^T x or A^H x
+#   A planes: (B, m, n), x planes: (B, m)  ->  y planes: (B, n) in f32.
+# Grid (B, n_tiles): every step writes a distinct output tile (parallel).
+# ---------------------------------------------------------------------------
+
+def _sbgemv_th_complex_kernel(conj: bool, Ar_ref, Ai_ref, xr_ref, xi_ref,
+                              yr_ref, yi_ref):
+    Ar = Ar_ref[0]                      # (m, bn)
+    Ai = Ai_ref[0]
+    xr = xr_ref[...]                    # (1, m)
+    xi = xi_ref[...]
+    rr = _dot(xr, Ar)                   # (1, bn) — MXU matmul
+    ii = _dot(xi, Ai)
+    ri = _dot(xr, Ai)
+    ir = _dot(xi, Ar)
+    if conj:   # y = conj(A)^T x
+        yr_ref[...] = rr + ii
+        yi_ref[...] = ir - ri
+    else:      # y = A^T x
+        yr_ref[...] = rr - ii
+        yi_ref[...] = ir + ri
+
+
+def sbgemv_th_complex(A_re, A_im, x_re, x_im, *, conj: bool,
+                      block_n: int = 512, interpret: bool = False):
+    """(Conjugate-)transpose batched complex GEMV.  Shapes must be padded:
+    m % 8 == 0, n % block_n == 0.  Returns (y_re, y_im) f32 of shape (B, n)."""
+    B, m, n = A_re.shape
+    assert n % block_n == 0 and x_re.shape == (B, m)
+    grid = (B, n // block_n)
+    spec_A = pl.BlockSpec((1, m, block_n), lambda b, j: (b, 0, j))
+    spec_x = pl.BlockSpec((1, m), lambda b, j: (b, 0))
+    spec_y = pl.BlockSpec((1, block_n), lambda b, j: (b, j))
+    out = jax.ShapeDtypeStruct((B, n), _ACC)
+    return pl.pallas_call(
+        functools.partial(_sbgemv_th_complex_kernel, conj),
+        grid=grid,
+        in_specs=[spec_A, spec_A, spec_x, spec_x],
+        out_specs=[spec_y, spec_y],
+        out_shape=[out, out],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(A_re, A_im, x_re, x_im)
+
+
+# ---------------------------------------------------------------------------
+# Non-transpose, complex: y = A x
+#   A planes: (B, m, n), x planes: (B, n)  ->  y planes: (B, m) in f32.
+# Grid (B, n_tiles): column tiles accumulate into the same output block, so
+# the j axis is a reduction ("arbitrary") and is innermost.
+# ---------------------------------------------------------------------------
+
+def _sbgemv_n_complex_kernel(Ar_ref, Ai_ref, xr_ref, xi_ref, yr_ref, yi_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        yr_ref[...] = jnp.zeros_like(yr_ref)
+        yi_ref[...] = jnp.zeros_like(yi_ref)
+
+    Ar = Ar_ref[0]                      # (m, bn)
+    Ai = Ai_ref[0]
+    xr = xr_ref[...]                    # (1, bn)
+    xi = xi_ref[...]
+    # contract over the bn axis: (m, bn) x (1, bn) -> (m, 1)
+    dg = lambda A, v: jax.lax.dot_general(
+        A, v, (((1,), (1,)), ((), ())), preferred_element_type=_ACC)
+    rr = dg(Ar, xr)
+    ii = dg(Ai, xi)
+    ri = dg(Ai, xr)
+    ir = dg(Ar, xi)
+    yr_ref[...] += (rr - ii).reshape(yr_ref.shape)
+    yi_ref[...] += (ir + ri).reshape(yi_ref.shape)
+
+
+def sbgemv_n_complex(A_re, A_im, x_re, x_im, *, block_n: int = 512,
+                     interpret: bool = False):
+    """Non-transpose batched complex GEMV.  m % 8 == 0, n % block_n == 0.
+    Returns (y_re, y_im) f32 of shape (B, m)."""
+    B, m, n = A_re.shape
+    assert n % block_n == 0 and x_re.shape == (B, n)
+    grid = (B, n // block_n)
+    spec_A = pl.BlockSpec((1, m, block_n), lambda b, j: (b, 0, j))
+    spec_x = pl.BlockSpec((1, block_n), lambda b, j: (b, j))
+    spec_y = pl.BlockSpec((1, m), lambda b, j: (b, 0))
+    out = jax.ShapeDtypeStruct((B, m), _ACC)
+    return pl.pallas_call(
+        _sbgemv_n_complex_kernel,
+        grid=grid,
+        in_specs=[spec_A, spec_A, spec_x, spec_x],
+        out_specs=[spec_y, spec_y],
+        out_shape=[out, out],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(A_re, A_im, x_re, x_im)
+
+
+# ---------------------------------------------------------------------------
+# Real variants (the paper ships real s/d kernels too — Fig. 1 benchmarks
+# both real and complex datatypes).
+# ---------------------------------------------------------------------------
+
+def _sbgemv_th_real_kernel(A_ref, x_ref, y_ref):
+    y_ref[...] = _dot(x_ref[...], A_ref[0])
+
+
+def sbgemv_th_real(A, x, *, block_n: int = 512, interpret: bool = False):
+    """y = A^T x, real.  A (B, m, n), x (B, m) -> y (B, n) f32."""
+    B, m, n = A.shape
+    assert n % block_n == 0 and x.shape == (B, m)
+    grid = (B, n // block_n)
+    return pl.pallas_call(
+        _sbgemv_th_real_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, m, block_n), lambda b, j: (b, 0, j)),
+                  pl.BlockSpec((1, m), lambda b, j: (b, 0))],
+        out_specs=pl.BlockSpec((1, block_n), lambda b, j: (b, j)),
+        out_shape=jax.ShapeDtypeStruct((B, n), _ACC),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(A, x)
+
+
+def _sbgemv_n_real_kernel(A_ref, x_ref, y_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    acc = jax.lax.dot_general(A_ref[0], x_ref[...], (((1,), (1,)), ((), ())),
+                              preferred_element_type=_ACC)
+    y_ref[...] += acc.reshape(y_ref.shape)
+
+
+def sbgemv_n_real(A, x, *, block_n: int = 512, interpret: bool = False):
+    """y = A x, real.  A (B, m, n), x (B, n) -> y (B, m) f32."""
+    B, m, n = A.shape
+    assert n % block_n == 0 and x.shape == (B, n)
+    grid = (B, n // block_n)
+    return pl.pallas_call(
+        _sbgemv_n_real_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, m, block_n), lambda b, j: (b, 0, j)),
+                  pl.BlockSpec((1, block_n), lambda b, j: (b, j))],
+        out_specs=pl.BlockSpec((1, m), lambda b, j: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m), _ACC),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(A, x)

@@ -1,0 +1,4 @@
+# dryrun.py must be launched as its own process (it sets XLA_FLAGS before
+# importing jax) — do not import it here.
+from .mesh import (make_production_mesh, make_test_mesh, mesh_shape_dict,  # noqa: F401
+                   dp_axes, fftmatvec_grid)

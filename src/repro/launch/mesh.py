@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; tests and benches see the real single device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_shape_dict(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh):
+    """Data-parallel axes: batch shards over ('pod','data') when present."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for multi-device CPU tests (device_count must allow it)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def fftmatvec_grid(mesh):
+    """Map the production mesh onto FFTMatvec's 2-D (row, col) grid,
+    following the paper's comm-aware regime (p_r = 1 up to 512 devices;
+    rows only across slow tiers): single-pod -> 1 x 256 (cols over
+    data+model); multi-pod -> rows = pod (N_d=100 divides 2), cols =
+    data x model.  Returns (row_axes, col_axes) tuples (row may be empty)."""
+    if "pod" in mesh.axis_names:
+        return ("pod",), ("data", "model")
+    return (), ("data", "model")

@@ -1,0 +1,3 @@
+# Submodules are imported directly (repro.models.api etc.); keep this
+# __init__ minimal to avoid configs<->models import cycles.
+from .policy import PrecisionPolicy  # noqa: F401

@@ -1,0 +1,203 @@
+"""Zamba2-style hybrid: a Mamba-2 backbone with ONE shared transformer
+block invoked after every ``shared_attn_every`` SSM layers (weight reuse
+across depth, as in Zamba/Zamba2).  Decode carries per-layer SSM states
+plus one KV cache slot per shared-block *invocation*.
+
+Simplification vs the released Zamba2 checkpoints (noted in DESIGN.md):
+the shared block takes the hidden state directly (no concat-with-embedding
+projector, no per-invocation LoRA)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from .layers import F32
+from .mamba import (init_mamba2_layer, init_ssm_state, mamba2_block,
+                    mamba2_layer_specs)
+from .transformer import _layer, _remat, _shard, scan_or_loop, unembed
+
+
+def _n_groups(cfg: ModelConfig):
+    k = cfg.shared_attn_every
+    return cfg.n_layers // k, cfg.n_layers % k
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, cfg.n_layers + 8)
+    layers = jax.vmap(lambda k: init_mamba2_layer(cfg, k))(
+        jnp.stack(ks[:cfg.n_layers]))
+    dt = cfg.policy.p()
+    D, F, Dh = cfg.d_model, cfg.d_ff, cfg.head_dim()
+    Hq, Hkv = cfg.n_heads, cfg.n_kv
+    kk = ks[cfg.n_layers:]
+    shared = {
+        "ln1": jnp.ones((D,), dt),
+        "wq": L.init_dense(kk[0], (D, Hq * Dh), dt),
+        "wk": L.init_dense(kk[1], (D, Hkv * Dh), dt),
+        "wv": L.init_dense(kk[2], (D, Hkv * Dh), dt),
+        "wo": L.init_dense(kk[3], (Hq * Dh, D), dt),
+        "ln2": jnp.ones((D,), dt),
+        "wg": L.init_dense(kk[4], (D, F), dt),
+        "wu": L.init_dense(kk[5], (D, F), dt),
+        "wd": L.init_dense(kk[6], (F, D), dt),
+    }
+    return {
+        "embed": L.init_embed(kk[7], cfg.vocab, D, dt),
+        "layers": layers,
+        "shared_attn": shared,
+        "ln_f": jnp.ones((D,), dt),
+    }
+
+
+def param_specs(cfg: ModelConfig, mesh_shape: dict, *, fsdp="data", tp="model"):
+    lspecs = mamba2_layer_specs(cfg, mesh_shape, fsdp=fsdp, tp=tp)
+    lspecs = jax.tree.map(lambda s: P(None, *s), lspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    D, F, Dh = cfg.d_model, cfg.d_ff, cfg.head_dim()
+    f = lambda s: _shard(s, fsdp, mesh_shape)
+    t = lambda s: _shard(s, tp, mesh_shape)
+    shared = {
+        "ln1": P(None),
+        "wq": P(f(D), t(cfg.n_heads * Dh)),
+        "wk": P(f(D), t(cfg.n_kv * Dh)),
+        "wv": P(f(D), t(cfg.n_kv * Dh)),
+        "wo": P(t(cfg.n_heads * Dh), f(D)),
+        "ln2": P(None),
+        "wg": P(f(D), t(F)),
+        "wu": P(f(D), t(F)),
+        "wd": P(t(F), f(D)),
+    }
+    return {
+        "embed": P(t(cfg.vocab), f(D)),
+        "layers": lspecs,
+        "shared_attn": shared,
+        "ln_f": P(None),
+    }
+
+
+def _group_slices(cfg: ModelConfig):
+    """Static (start, length) for each mamba-layer group; a shared-attn
+    invocation follows each full group."""
+    k = cfg.shared_attn_every
+    n_full, rem = _n_groups(cfg)
+    slices = [(g * k, k) for g in range(n_full)]
+    if rem:
+        slices.append((n_full * k, rem))
+    return slices, n_full
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    h = params["embed"][tokens].astype(cfg.policy.c())
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    slices, n_shared = _group_slices(cfg)
+
+    def mamba_body(h, lp):
+        return mamba2_block(cfg, lp, h)[0], None
+
+    mamba_body = _remat(cfg, mamba_body)
+    for gi, (start, length) in enumerate(slices):
+        lp_g = jax.tree.map(
+            lambda p: jax.lax.slice_in_dim(p, start, start + length, axis=0),
+            params["layers"])
+        h, _ = scan_or_loop(cfg, mamba_body, h, lp_g)
+        if gi < n_shared:
+            h, _, _ = _layer(cfg, h, params["shared_attn"], positions)
+    return unembed(cfg, params, h), jnp.zeros((), F32)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int):
+    one = init_ssm_state(cfg, batch, version=2)
+    _, n_shared = _group_slices(cfg)
+    kdt = cfg.policy.k()
+    Dh = cfg.head_dim()
+    kv = jnp.zeros((n_shared, batch, max_seq, cfg.n_kv, Dh), kdt)
+    return {"mamba": jax.tree.map(
+        lambda x: jnp.zeros((cfg.n_layers, *x.shape), x.dtype), one),
+        "attn_k": kv, "attn_v": kv, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                       mesh_shape: dict, *, dp, tp="model"):
+    from .transformer import cache_specs
+    kv = cache_specs(cfg, batch, max_seq, mesh_shape, dp=dp, tp=tp)["k"]
+    Di = cfg.ssm_expand * cfg.d_model
+    H = Di // cfg.ssm_head_dim
+    b_ax = _shard(batch, dp, mesh_shape)
+    return {"mamba": {"conv": P(None, b_ax, None, _shard(Di + 2 * cfg.ssm_state, tp, mesh_shape)),
+                      "ssm": P(None, b_ax, _shard(H, tp, mesh_shape), None, None)},
+            "attn_k": kv, "attn_v": kv, "pos": P()}
+
+
+def _run_groups(cfg, params, h, positions, state, *, update_cache, prefill_kv=None):
+    """Shared driver for decode/prefill: groups of mamba layers + shared-attn
+    invocations with per-invocation KV slots."""
+    slices, n_shared = _group_slices(cfg)
+    new_mamba, new_k, new_v = [], [], []
+    pos = state["pos"]
+    for gi, (start, length) in enumerate(slices):
+        lp_g = jax.tree.map(
+            lambda p: jax.lax.slice_in_dim(p, start, start + length, axis=0),
+            params["layers"])
+        st_g = jax.tree.map(
+            lambda p: jax.lax.slice_in_dim(p, start, start + length, axis=0),
+            state["mamba"])
+
+        def body(h, lp_st):
+            lp, st = lp_st
+            h2, new_st = mamba2_block(cfg, lp, h, state=st)
+            return h2, new_st
+
+        h, st_new = scan_or_loop(cfg, body, h, (lp_g, st_g))
+        new_mamba.append(st_new)
+        if gi < n_shared:
+            if update_cache:
+                cache = (state["attn_k"][gi], state["attn_v"][gi])
+                h, _, (ck, cv) = _layer(cfg, h, params["shared_attn"],
+                                        positions, cache=cache, cache_pos=pos)
+            else:  # prefill: full-sequence attention, collect fresh kv
+                h, _, (ck, cv) = _layer(cfg, h, params["shared_attn"],
+                                        positions, return_kv=True)
+                pad = prefill_kv - ck.shape[1]
+                ck = jnp.pad(ck.astype(cfg.policy.k()),
+                             ((0, 0), (0, pad), (0, 0), (0, 0)))
+                cv = jnp.pad(cv.astype(cfg.policy.k()),
+                             ((0, 0), (0, pad), (0, 0), (0, 0)))
+            new_k.append(ck)
+            new_v.append(cv)
+    mamba = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_mamba)
+    if new_k:
+        attn_k, attn_v = jnp.stack(new_k), jnp.stack(new_v)
+    else:   # reduced analysis configs may have no shared-attn invocation
+        attn_k, attn_v = state["attn_k"][:0], state["attn_v"][:0]
+    return h, {"mamba": mamba, "attn_k": attn_k,
+               "attn_v": attn_v, "pos": pos}
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens):
+    h = params["embed"][tokens].astype(cfg.policy.c())
+    B = tokens.shape[0]
+    positions = jnp.broadcast_to(state["pos"], (B, 1))
+    h, new_state = _run_groups(cfg, params, h, positions, state,
+                               update_cache=True)
+    new_state["pos"] = state["pos"] + 1
+    return unembed(cfg, params, h), new_state
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_seq: int):
+    B, S = tokens.shape
+    h = params["embed"][tokens].astype(cfg.policy.c())
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    state = init_decode_state(cfg, B, max_seq)
+    h, new_state = _run_groups(cfg, params, h, positions, state,
+                               update_cache=False, prefill_kv=max_seq)
+    new_state["pos"] = jnp.full((), S, jnp.int32)
+    return unembed(cfg, params, h), new_state

@@ -1,0 +1,282 @@
+"""Common neural-net primitives: norms, RoPE, GQA attention (memory-bounded
+chunked softmax + a block-causal FLOP-exact variant), gated MLPs.
+
+All matmuls run in the policy compute dtype with f32 accumulation
+(``preferred_element_type``); softmax statistics are always f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .sharding_ctx import constrain
+
+F32 = jnp.float32
+
+
+def rms_norm(x, gamma, eps: float = 1e-5):
+    h = x.astype(F32)
+    scale = jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * scale).astype(x.dtype) * gamma.astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    h = x.astype(F32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean((h - mu) ** 2, axis=-1, keepdims=True)
+    out = (h - mu) * jax.lax.rsqrt(var + eps)
+    return out.astype(x.dtype) * gamma.astype(x.dtype) + beta.astype(x.dtype)
+
+
+def dense(x, w, b=None):
+    y = jnp.dot(x, w.astype(x.dtype), preferred_element_type=F32)
+    if b is not None:
+        y = y + b.astype(F32)
+    return y.astype(x.dtype)
+
+
+def sinusoid_positions(positions, d: int, max_scale: float = 1e4):
+    """Sinusoidal positional embedding, length-agnostic.  positions:
+    (..., S) int -> (..., S, d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(max_scale) * jnp.arange(half, dtype=F32) / half)
+    ang = positions[..., None].astype(F32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, Dh); positions: (..., S) int."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=F32) / d))
+    ang = positions[..., :, None].astype(F32) * freqs          # (..., S, d/2)
+    ang = ang[..., None, :]                                    # (..., S, 1, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention.  q: (B, Sq, Hq, Dh); k, v: (B, Skv, Hkv, Dh); GQA via reshape.
+# ---------------------------------------------------------------------------
+
+def _split_gqa(q, n_kv):
+    B, S, Hq, Dh = q.shape
+    q = q.reshape(B, S, n_kv, Hq // n_kv, Dh)
+    return constrain(q, "batch", None, "kv_heads", "gqa_groups", None)
+
+
+def _attn_chunk(q, k, v, mask, scale):
+    """One (q-chunk x kv-chunk) block.  q: (B,c,Hkv,G,Dh), k/v: (B,kc,Hkv,Dh).
+    Returns (out_unnorm f32, row_max f32, row_sumexp f32)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=F32) * scale
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1)                               # (B,h,g,q)
+    # guard fully-masked rows
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=F32)
+    return o, m_safe, l
+
+
+def _combine(o1, m1, l1, o2, m2, l2):
+    """Online-softmax combine of two partial attention results."""
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    perm = lambda a: jnp.moveaxis(a, (1, 2, 3), (2, 3, 1))  # (B,h,g,q)->(B,q,h,g)
+    o = o1 * perm(a1)[..., None] + o2 * perm(a2)[..., None]
+    return o, m, l1 * a1 + l2 * a2
+
+
+def _pick_chunk(S: int, c: int) -> int:
+    """Largest divisor of S that is <= c (chunks must tile exactly)."""
+    c = min(c, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      q_chunk: int = 512, kv_chunk: int = 1024,
+                      unroll: bool = False):
+    """Flash-style attention in pure jnp: scan over q chunks, inner scan over
+    kv chunks with online softmax.  Memory is O(q_chunk * kv_chunk) per
+    step; every kv chunk is visited for every q chunk (causal blocks above
+    the diagonal still cost FLOPs — see block_causal_attention).
+
+    ``unroll=True`` (analysis mode) replaces both scans with python loops —
+    identical math, but HloCostAnalysis sees every iteration."""
+    B, Sq, Hq, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    qc = _pick_chunk(Sq, q_chunk)
+    kc = _pick_chunk(Skv, kv_chunk)
+    nq, nk = Sq // qc, Skv // kc
+    scale = 1.0 / (Dh ** 0.5)
+    qg = _split_gqa(q, Hkv)                                # (B,Sq,Hkv,G,Dh)
+    G = qg.shape[3]
+
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+
+    def q_body(_, iq):
+        qb = jax.lax.dynamic_slice_in_dim(qg, iq * qc, qc, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, iq * qc, qc)
+
+        def kv_body(carry, ik):
+            o, m, l = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, ik * kc, kc, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ik * kc, kc, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(kv_pos, ik * kc, kc)
+            mask = (qp[:, None] >= kp[None, :]) if causal else \
+                jnp.ones((qc, kc), bool)
+            mask = mask[None, None, None]                  # (1,1,1,q,k)
+            ob, mb, lb = _attn_chunk(qb, kb, vb, mask, scale)
+            return _combine(o, m, l, ob, mb, lb), None
+
+        o0 = constrain(jnp.zeros((B, qc, Hkv, G, Dh), F32),
+                       "batch", None, "kv_heads", "gqa_groups", None)
+        m0 = constrain(jnp.full((B, Hkv, G, qc), -jnp.inf, F32),
+                       "batch", "kv_heads", "gqa_groups", None)
+        l0 = constrain(jnp.zeros((B, Hkv, G, qc), F32),
+                       "batch", "kv_heads", "gqa_groups", None)
+        if unroll:
+            carry = (o0, m0, l0)
+            for ik in range(nk):
+                carry, _ = kv_body(carry, jnp.asarray(ik))
+            o, m, l = carry
+        else:
+            (o, m, l), _ = jax.lax.scan(kv_body, (o0, m0, l0), jnp.arange(nk))
+        l_perm = jnp.moveaxis(l, (1, 2, 3), (2, 3, 1))
+        out = o / jnp.maximum(l_perm[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    if unroll:
+        chunks = jnp.stack([q_body(None, jnp.asarray(i))[1]
+                            for i in range(nq)])
+    else:
+        _, chunks = jax.lax.scan(q_body, None, jnp.arange(nq))
+    out = jnp.moveaxis(chunks, 0, 1).reshape(B, nq * qc, Hkv * G, Dh)
+    return out[:, :Sq]
+
+
+def block_causal_attention(q, k, v, *, q_offset=0, q_chunk: int = 512,
+                           kv_chunk: int = 1024, unroll: bool = False):
+    """FLOP-exact causal attention: iterate only the lower-triangular
+    (q-chunk, kv-chunk) block pairs (a static pair list), accumulating
+    online-softmax stats per q chunk.  Halves attention FLOPs vs
+    ``chunked_attention`` — the §Perf 'causal skip' lever."""
+    B, Sq, Hq, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    qc = _pick_chunk(Sq, q_chunk)
+    kc = _pick_chunk(Skv, kv_chunk)
+    nq, nk = Sq // qc, Skv // kc
+    scale = 1.0 / (Dh ** 0.5)
+    qg = _split_gqa(q, Hkv)
+    G = qg.shape[3]
+
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+    # static list of needed block pairs: kv block fully below every q row of
+    # the chunk, or intersecting the diagonal
+    pairs = [(i, j) for i in range(nq) for j in range(nk)
+             if (j * kc) <= (q_offset + (i + 1) * qc - 1)]
+    pair_arr = jnp.array(pairs, jnp.int32)                 # (P, 2)
+
+    def body(carry, pair):
+        o, m, l = carry                                    # full-size accums
+        i, j = pair[0], pair[1]
+        qb = jax.lax.dynamic_slice_in_dim(qg, i * qc, qc, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, i * qc, qc)
+        kb = jax.lax.dynamic_slice_in_dim(k, j * kc, kc, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, j * kc, kc, axis=1)
+        kp = jax.lax.dynamic_slice_in_dim(kv_pos, j * kc, kc)
+        mask = (qp[:, None] >= kp[None, :])[None, None, None]
+        ob, mb, lb = _attn_chunk(qb, kb, vb, mask, scale)
+        oi = jax.lax.dynamic_slice_in_dim(o, i * qc, qc, axis=1)
+        mi = jax.lax.dynamic_slice_in_dim(m, i * qc, qc, axis=3)
+        li = jax.lax.dynamic_slice_in_dim(l, i * qc, qc, axis=3)
+        oc, mc, lc = _combine(oi, mi, li, ob, mb, lb)
+        o = jax.lax.dynamic_update_slice_in_dim(o, oc, i * qc, axis=1)
+        m = jax.lax.dynamic_update_slice_in_dim(m, mc, i * qc, axis=3)
+        l = jax.lax.dynamic_update_slice_in_dim(l, lc, i * qc, axis=3)
+        return (o, m, l), None
+
+    o0 = constrain(jnp.zeros((B, Sq, Hkv, G, Dh), F32),
+                    "batch", None, "kv_heads", "gqa_groups", None)
+    m0 = constrain(jnp.full((B, Hkv, G, Sq), -jnp.inf, F32),
+                   "batch", "kv_heads", "gqa_groups", None)
+    l0 = constrain(jnp.zeros((B, Hkv, G, Sq), F32),
+                   "batch", "kv_heads", "gqa_groups", None)
+    if unroll:
+        carry = (o0, m0, l0)
+        for p in pairs:
+            carry, _ = body(carry, jnp.asarray(p, jnp.int32))
+        o, m, l = carry
+    else:
+        (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0), pair_arr)
+    l_perm = jnp.moveaxis(l, (1, 2, 3), (2, 3, 1))
+    out = (o / jnp.maximum(l_perm[..., None], 1e-30)).astype(q.dtype)
+    return out.reshape(B, Sq, Hkv * G, Dh)
+
+
+def attention(q, k, v, *, causal: bool, cfg, q_offset=0):
+    """Dispatch between attention implementations (cfg.attn_impl):
+    chunked (baseline) | block_causal (causal FLOP skip) | flash (the
+    Pallas VMEM-resident kernel — TPU runtime; interpret-mode on CPU)."""
+    unroll = cfg.analysis_mode
+    if cfg.attn_impl == "flash" and q_offset == 0 and q.shape[1] > 1:
+        from repro.kernels.flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=causal,
+                               q_block=cfg.attn_q_chunk,
+                               kv_block=cfg.attn_kv_chunk,
+                               interpret=jax.default_backend() == "cpu")
+    if causal and cfg.attn_impl == "block_causal" and q.shape[1] > 1:
+        return block_causal_attention(q, k, v, q_offset=q_offset,
+                                      q_chunk=cfg.attn_q_chunk,
+                                      kv_chunk=cfg.attn_kv_chunk,
+                                      unroll=unroll)
+    return chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                             q_chunk=cfg.attn_q_chunk,
+                             kv_chunk=cfg.attn_kv_chunk, unroll=unroll)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x, wg, wu, wd):
+    g = constrain(dense(x, wg), "batch", None, "ff")
+    u = constrain(dense(x, wu), "batch", None, "ff")
+    return dense(jax.nn.silu(g.astype(F32)).astype(x.dtype) * u, wd)
+
+
+def gelu_mlp(x, w1, b1, w2, b2):
+    h = constrain(dense(x, w1, b1), "batch", None, "ff")
+    return dense(jax.nn.gelu(h.astype(F32)).astype(x.dtype), w2, b2)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def init_dense(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def init_embed(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32)).astype(dtype)

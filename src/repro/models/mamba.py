@@ -1,0 +1,379 @@
+"""State-space models: Mamba-1 (falcon-mamba-7b) and Mamba-2/SSD (zamba2).
+
+Both use a chunked formulation so the (B, L, d_inner, d_state) hidden
+state sequence is never fully materialized: an outer ``lax.scan`` over
+chunks carries the state, and only one chunk's intermediates are live.
+
+Mamba-1: diagonal selective SSM — elementwise linear recurrence
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t,   y_t = C_t . h_t + D x_t
+solved within a chunk by ``jax.lax.associative_scan`` on (a, b) pairs.
+
+Mamba-2 (SSD): scalar-per-head decay; the chunk-parallel *matmul* form
+(intra-chunk attention-like term + inter-chunk state passing) — MXU
+friendly, as in the SSD paper.
+
+LTI/FFT mode (DESIGN.md §Arch-applicability): with input-independent
+dt/B/C the recurrence is a bank of 1-D LTI convolutions, i.e. a batch of
+*triangular Toeplitz* matvecs — computed with the paper's circulant-
+embedding FFT method (``lti_fft_mode=True``).  This is where FFTMatvec
+(C1) meets the SSM architectures; the selective (input-dependent) default
+path is not Toeplitz and uses the scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from .layers import F32
+from .sharding_ctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# chunked elementwise linear recurrence  h_t = a_t * h_{t-1} + b_t
+# ---------------------------------------------------------------------------
+
+def _assoc_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, b1 * a2 + b2
+
+
+def chunked_linear_recurrence(a, b, chunk: int):
+    """a, b: (B, T, ...) -> h: (B, T, ...) with h_t = a_t h_{t-1} + b_t.
+
+    Outer scan over T/chunk chunks (state carried), inner associative scan
+    (log-depth) within the chunk; only one chunk is live at a time."""
+    Bsz, T = a.shape[:2]
+    c = min(chunk, T)
+    while T % c:
+        c -= 1
+    n = T // c
+    a_c = a.reshape(Bsz, n, c, *a.shape[2:])
+    b_c = b.reshape(Bsz, n, c, *b.shape[2:])
+
+    def body(h0, ab):
+        a_k, b_k = ab                       # (B, c, ...)
+        A_cum, B_cum = jax.lax.associative_scan(_assoc_combine, (a_k, b_k),
+                                                axis=1)
+        h = B_cum + A_cum * h0[:, None]
+        return h[:, -1], h
+
+    h0 = jnp.zeros_like(a, shape=(Bsz, *a.shape[2:]))
+    _, h = jax.lax.scan(body, h0, (jnp.moveaxis(a_c, 1, 0),
+                                   jnp.moveaxis(b_c, 1, 0)))
+    h = jnp.moveaxis(h, 0, 1).reshape(Bsz, T, *a.shape[2:])
+    return h
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv.  x: (B, T, C), w: (C, K).  With ``state``
+    ((B, K-1, C), decode) uses it as left context and returns the new one."""
+    K = w.shape[-1]
+    if state is None:
+        pad = jnp.zeros_like(x, shape=(x.shape[0], K - 1, x.shape[2]))
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, T+K-1, C)
+    out = sum(xp[:, k:k + x.shape[1], :] * w[:, k].astype(x.dtype)
+              for k in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else pad
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block
+# ---------------------------------------------------------------------------
+
+def init_mamba1_layer(cfg: ModelConfig, key):
+    dt = cfg.policy.p()
+    D = cfg.d_model
+    Di = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    R = cfg.ssm_dt_rank or max(D // 16, 1)
+    ks = jax.random.split(key, 8)
+    # S4D-real initialization for A
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=F32), (Di, N))
+    return {
+        "ln": jnp.ones((D,), dt),
+        "in_proj": L.init_dense(ks[0], (D, 2 * Di), dt),
+        "conv_w": L.init_dense(ks[1], (Di, cfg.ssm_conv), dt, scale=0.5),
+        "x_proj": L.init_dense(ks[2], (Di, R + 2 * N), dt),
+        "dt_proj": L.init_dense(ks[3], (R, Di), dt),
+        "dt_bias": jnp.zeros((Di,), F32),
+        "A_log": jnp.log(A),
+        "D_skip": jnp.ones((Di,), F32),
+        "out_proj": L.init_dense(ks[4], (Di, D), dt),
+    }
+
+
+def mamba1_layer_specs(cfg: ModelConfig, mesh_shape, *, fsdp="data", tp="model"):
+    from .transformer import _shard
+    D = cfg.d_model
+    Di = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    R = cfg.ssm_dt_rank or max(D // 16, 1)
+    f, t = (lambda s: _shard(s, fsdp, mesh_shape)), (lambda s: _shard(s, tp, mesh_shape))
+    return {
+        "ln": P(None),
+        "in_proj": P(f(D), t(2 * Di)),
+        "conv_w": P(t(Di), None),
+        "x_proj": P(t(Di), None),
+        "dt_proj": P(None, t(Di)),
+        "dt_bias": P(t(Di)),
+        "A_log": P(t(Di), None),
+        "D_skip": P(t(Di)),
+        "out_proj": P(t(Di), f(D)),
+    }
+
+
+def _ssm_selective(x, dt, Bc, Cc, A_log, D_skip, chunk: int, ssm_state=None,
+                   unroll: bool = False):
+    """Selective scan, chunk-fused: the (B, c, Di, N) transition/input
+    tensors are built *inside* the chunk loop so only one chunk's state
+    sequence is ever live (the full (B, T, Di, N) tensor would be tens of
+    GB per device for falcon-mamba at 4k).
+
+    x: (B,T,Di); dt: (B,T,Di); Bc/Cc: (B,T,N); ssm_state: (B,Di,N) carried
+    state (decode).  f32 throughout; returns (y (B,T,Di), last_state)."""
+    Bsz, T, Di = x.shape
+    N = Bc.shape[-1]
+    x, dt, Bc, Cc = (v.astype(F32) for v in (x, dt, Bc, Cc))
+    c = min(chunk, T)
+    while T % c:
+        c -= 1
+    n = T // c
+    A = -jnp.exp(A_log.astype(F32))                          # (Di, N)
+    chunks = lambda v: jnp.moveaxis(v.reshape(Bsz, n, c, *v.shape[2:]), 1, 0)
+
+    def body(h0, xs):
+        x_k, dt_k, B_k, C_k = xs                             # (B,c,...)
+        a = jnp.exp(dt_k[..., None] * A[None, None])         # (B,c,Di,N)
+        b = (dt_k * x_k)[..., None] * B_k[:, :, None, :]
+        A_cum, B_cum = jax.lax.associative_scan(_assoc_combine, (a, b), axis=1)
+        h = B_cum + A_cum * h0[:, None]
+        y_k = jnp.einsum("bcdn,bcn->bcd", h, C_k, preferred_element_type=F32)
+        return h[:, -1], y_k
+
+    h0 = (jnp.zeros((Bsz, Di, N), F32) if ssm_state is None
+          else ssm_state.astype(F32))
+    xs_all = (chunks(x), chunks(dt), chunks(Bc), chunks(Cc))
+    if unroll:
+        h, ys_l = h0, []
+        for i in range(n):
+            h, y_k = body(h, jax.tree.map(lambda v: v[i], xs_all))
+            ys_l.append(y_k)
+        h_last, ys = h, jnp.stack(ys_l)
+    else:
+        h_last, ys = jax.lax.scan(body, h0, xs_all)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, T, Di)
+    return y + D_skip[None, None] * x, h_last
+
+
+def mamba1_block(cfg: ModelConfig, lp, h, *, state=None):
+    """h: (B,T,D).  state (decode): {"conv": (B,K-1,Di), "ssm": (B,Di,N)}.
+    Returns (out, new_state)."""
+    x = L.rms_norm(h, lp["ln"], cfg.norm_eps)
+    xz = constrain(L.dense(x, lp["in_proj"]), "batch", None, "ff")
+    Di = cfg.ssm_expand * cfg.d_model
+    xi, z = xz[..., :Di], xz[..., Di:]
+    conv_state = state["conv"] if state is not None else None
+    xi, new_conv = causal_conv1d(xi, lp["conv_w"], conv_state)
+    xi = jax.nn.silu(xi.astype(F32))
+    N = cfg.ssm_state
+    R = cfg.ssm_dt_rank or max(cfg.d_model // 16, 1)
+    proj = L.dense(xi.astype(h.dtype), lp["x_proj"]).astype(F32)
+    dt_r, Bc, Cc = proj[..., :R], proj[..., R:R + N], proj[..., R + N:]
+    dt = jax.nn.softplus(
+        dt_r @ lp["dt_proj"].astype(F32) + lp["dt_bias"][None, None])
+    ssm_state = state["ssm"] if state is not None else None
+    y, new_ssm = _ssm_selective(xi, dt, Bc, Cc, lp["A_log"], lp["D_skip"],
+                                cfg.ssm_chunk, ssm_state,
+                                unroll=cfg.analysis_mode)
+    y = y * jax.nn.silu(z.astype(F32))
+    out = L.dense(y.astype(h.dtype), lp["out_proj"])
+    new_state = {"conv": new_conv.astype(h.dtype), "ssm": new_ssm}
+    return h + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# LTI/FFT ablation path (paper C1 applied to the SSM family)
+# ---------------------------------------------------------------------------
+
+def mamba1_block_lti_fft(cfg: ModelConfig, lp, h):
+    """Frozen-(dt,B,C) variant: the SSM is LTI, so y = k * x is a bank of
+    triangular-Toeplitz matvecs, evaluated by circulant embedding + FFT
+    exactly as the paper's matvec (Phase 1/2/4/5 of C1 with a diagonal
+    Fourier-space multiply instead of the SBGEMV)."""
+    x = L.rms_norm(h, lp["ln"], cfg.norm_eps)
+    xz = constrain(L.dense(x, lp["in_proj"]), "batch", None, "ff")
+    Di = cfg.ssm_expand * cfg.d_model
+    xi, z = xz[..., :Di], xz[..., Di:]
+    xi, _ = causal_conv1d(xi, lp["conv_w"])
+    xi = jax.nn.silu(xi.astype(F32))
+    T = xi.shape[1]
+    N = cfg.ssm_state
+    # fixed dt = softplus(dt_bias); fixed B = C = 1/sqrt(N)
+    dt = jax.nn.softplus(lp["dt_bias"])                       # (Di,)
+    A = -jnp.exp(lp["A_log"])                                 # (Di, N)
+    decay = jnp.exp(dt[:, None] * A)                          # (Di, N)
+    t = jnp.arange(T, dtype=F32)
+    # impulse response k[t] = sum_n C_n B_n dt * decay^t   -> (T, Di)
+    kern = jnp.einsum("dn,tdn->td", jnp.full((Di, N), 1.0 / N) * dt[:, None],
+                      decay[None] ** t[:, None, None])
+    # triangular-Toeplitz matvec via circulant embedding (paper Phases 1-5)
+    K = jnp.fft.rfft(jnp.pad(kern, ((0, T), (0, 0))), axis=0)     # (T+1, Di)
+    X = jnp.fft.rfft(jnp.pad(xi, ((0, 0), (0, T), (0, 0))), axis=1)
+    y = jnp.fft.irfft(X * K[None], n=2 * T, axis=1)[:, :T]
+    y = y + lp["D_skip"][None, None] * xi
+    y = y * jax.nn.silu(z.astype(F32))
+    return h + L.dense(y.astype(h.dtype), lp["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block — zamba2's SSM component
+# ---------------------------------------------------------------------------
+
+def init_mamba2_layer(cfg: ModelConfig, key):
+    dt = cfg.policy.p()
+    D = cfg.d_model
+    Di = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    H = Di // cfg.ssm_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": jnp.ones((D,), dt),
+        # order: [x (Di), z (Di), B (N), C (N), dt (H)]
+        "in_proj": L.init_dense(ks[0], (D, 2 * Di + 2 * N + H), dt),
+        "conv_w": L.init_dense(ks[1], (Di + 2 * N, cfg.ssm_conv), dt, scale=0.5),
+        "A_log": jnp.zeros((H,), F32),
+        "dt_bias": jnp.zeros((H,), F32),
+        "D_skip": jnp.ones((H,), F32),
+        "norm_w": jnp.ones((Di,), dt),
+        "out_proj": L.init_dense(ks[2], (Di, D), dt),
+    }
+
+
+def mamba2_layer_specs(cfg: ModelConfig, mesh_shape, *, fsdp="data", tp="model"):
+    from .transformer import _shard
+    D = cfg.d_model
+    Di = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    H = Di // cfg.ssm_head_dim
+    f, t = (lambda s: _shard(s, fsdp, mesh_shape)), (lambda s: _shard(s, tp, mesh_shape))
+    return {
+        "ln": P(None),
+        "in_proj": P(f(D), None),
+        "conv_w": P(None, None),
+        "A_log": P(t(H)),
+        "dt_bias": P(t(H)),
+        "D_skip": P(t(H)),
+        "norm_w": P(t(Di)),
+        "out_proj": P(t(Di), f(D)),
+    }
+
+
+def _ssd_chunked(x, dt, Bc, Cc, A_log, chunk: int, state=None,
+                 unroll: bool = False):
+    """SSD chunk-parallel form.  x: (B,T,H,Ph); dt: (B,T,H); Bc/Cc: (B,T,N);
+    state: (B,H,Ph,N).  Returns (y (B,T,H,Ph), last_state)."""
+    Bsz, T, H, Ph = x.shape
+    N = Bc.shape[-1]
+    x, dt, Bc, Cc = (v.astype(F32) for v in (x, dt, Bc, Cc))
+    a = dt * (-jnp.exp(A_log.astype(F32)))[None, None]  # (B,T,H) log-decay
+    c = min(chunk, T)
+    while T % c:
+        c -= 1
+    n = T // c
+    xb = (x * dt[..., None]).reshape(Bsz, n, c, H, Ph)
+    a = a.reshape(Bsz, n, c, H)
+    Bb = Bc.reshape(Bsz, n, c, N)
+    Cb = Cc.reshape(Bsz, n, c, N)
+
+    cum = jnp.cumsum(a, axis=2)                     # within-chunk log decay
+    # intra-chunk "attention": L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,n,i,j,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    Ldec = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bgin,bgjn->bgij", Cb, Bb,
+                        preferred_element_type=F32)            # (B,n,i,j)
+    y_intra = jnp.einsum("bgij,bgijh,bgjhp->bgihp", scores, Ldec, xb,
+                         preferred_element_type=F32)
+
+    # chunk summary state: S_g = sum_j exp(cum_last - cum_j) * B_j x_j^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)            # (B,n,c,H)
+    S = jnp.einsum("bgjn,bgjh,bgjhp->bghpn", Bb, decay_to_end, xb,
+                   preferred_element_type=F32)                 # (B,n,H,Ph,N)
+    a_tot = jnp.exp(cum[:, :, -1, :])                          # (B,n,H)
+
+    def carry_fn(S_prev, sg):
+        S_g, a_g = sg
+        S_new = S_prev * a_g[..., None, None] + S_g
+        return S_new, S_prev
+
+    S0 = (jnp.zeros((Bsz, H, Ph, N), F32) if state is None
+          else state.astype(F32))
+    sg = (jnp.moveaxis(S, 1, 0), jnp.moveaxis(a_tot, 1, 0))
+    if unroll:
+        Sc, prevs = S0, []
+        for i in range(n):
+            Sc, Sp = carry_fn(Sc, jax.tree.map(lambda v: v[i], sg))
+            prevs.append(Sp)
+        S_last, S_prevs = Sc, jnp.stack(prevs)
+    else:
+        S_last, S_prevs = jax.lax.scan(carry_fn, S0, sg)
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)                      # (B,n,H,Ph,N)
+
+    # inter-chunk: y_i += C_i . (decay_from_start_i * S_prev)
+    y_inter = jnp.einsum("bgin,bgih,bghpn->bgihp", Cb, jnp.exp(cum), S_prevs,
+                         preferred_element_type=F32)
+    y = (y_intra + y_inter).reshape(Bsz, T, H, Ph)
+    return y, S_last
+
+
+def mamba2_block(cfg: ModelConfig, lp, h, *, state=None):
+    """h: (B,T,D).  state (decode): {"conv": (B,K-1,Di+2N), "ssm": (B,H,Ph,N)}."""
+    D = cfg.d_model
+    Di = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    Ph = cfg.ssm_head_dim
+    H = Di // Ph
+    x = L.rms_norm(h, lp["ln"], cfg.norm_eps)
+    proj = L.dense(x, lp["in_proj"])
+    xi = proj[..., :Di]
+    z = proj[..., Di:2 * Di]
+    BC = proj[..., 2 * Di:2 * Di + 2 * N]
+    dt_r = proj[..., 2 * Di + 2 * N:]
+    xBC = jnp.concatenate([xi, BC], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xBC, new_conv = causal_conv1d(xBC, lp["conv_w"], conv_state)
+    xBC = jax.nn.silu(xBC.astype(F32))
+    xi, Bc, Cc = xBC[..., :Di], xBC[..., Di:Di + N], xBC[..., Di + N:]
+    dt = jax.nn.softplus(dt_r.astype(F32) + lp["dt_bias"][None, None])
+    Bsz, T = h.shape[:2]
+    xh = constrain(xi.reshape(Bsz, T, H, Ph), "batch", None, "heads", None)
+    ssm_state = state["ssm"] if state is not None else None
+    y, new_ssm = _ssd_chunked(xh, dt, Bc, Cc, lp["A_log"], cfg.ssm_chunk,
+                              ssm_state, unroll=cfg.analysis_mode)
+    y = y + lp["D_skip"][None, None, :, None] * xh
+    y = y.reshape(Bsz, T, Di)
+    # gated RMSNorm (mamba2)
+    y = L.rms_norm((y * jax.nn.silu(z.astype(F32))).astype(h.dtype),
+                   lp["norm_w"], cfg.norm_eps)
+    return h + L.dense(y, lp["out_proj"]), {"conv": new_conv.astype(h.dtype),
+                                            "ssm": new_ssm}
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, version: int):
+    Di = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    K = cfg.ssm_conv
+    if version == 1:
+        return {"conv": jnp.zeros((batch, K - 1, Di), cfg.policy.c()),
+                "ssm": jnp.zeros((batch, Di, N), F32)}
+    H = Di // cfg.ssm_head_dim
+    return {"conv": jnp.zeros((batch, K - 1, Di + 2 * N), cfg.policy.c()),
+            "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, N), F32)}

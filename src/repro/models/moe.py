@@ -1,0 +1,98 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded gather/scatter
+dispatch (no (tokens x E x C) one-hot einsum — fine-grained MoE like
+granite-3b [40 experts, d_ff=512] would pay more FLOPs in the dispatch
+einsum than in the experts themselves).
+
+Dispatch is vmapped over token groups so the SPMD partitioner sees the
+group axis as a batch dim (groups = local batch rows); per group:
+  1. router logits -> top-k experts + gates
+  2. position-in-expert by cumulative sum; tokens beyond capacity drop
+  3. slot->token index table by scatter (an (E, C+1) table whose last
+     column absorbs dropped tokens)
+  4. gather tokens into (E, C, D), run experts as batched matmuls
+  5. gather each token's k slots back and combine with gate weights
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import F32, dense
+
+
+def _dispatch_group(x, idx, gate, E: int, C: int):
+    """x: (S, D); idx/gate: (S, k).  Returns (expert_in (E,C,D),
+    slot_pos (S,k), keep (S,k))."""
+    S, D = x.shape
+    k = idx.shape[1]
+    # position of each token within its expert's capacity buffer: count how
+    # many earlier (token, slot) pairs chose the same expert.
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)          # (S, k, E)
+    flat = onehot.reshape(S * k, E)
+    pos_flat = jnp.cumsum(flat, axis=0) - flat                # exclusive cumsum
+    pos = jnp.take_along_axis(
+        pos_flat.reshape(S, k, E), idx[..., None], axis=2)[..., 0]  # (S, k)
+    keep = pos < C
+    safe_pos = jnp.where(keep, pos, C)                        # C = drop slot
+    token_ids = jnp.broadcast_to(jnp.arange(S)[:, None], (S, k))
+    table = jnp.full((E, C + 1), S, jnp.int32)                # S = empty
+    table = table.at[idx, safe_pos].set(token_ids)            # (E, C+1)
+    slot_token = table[:, :C]                                 # (E, C)
+    valid = slot_token < S
+    x_pad = jnp.concatenate([x, jnp.zeros((1, D), x.dtype)], axis=0)
+    expert_in = x_pad[jnp.where(valid, slot_token, S)]        # (E, C, D)
+    return expert_in, safe_pos, keep
+
+
+def _combine_group(expert_out, idx, safe_pos, keep, gate):
+    """expert_out: (E, C, D) -> y (S, D) by gathering each token's slots."""
+    E, C, D = expert_out.shape
+    out_pad = jnp.pad(expert_out, ((0, 0), (0, 1), (0, 0)))   # drop slot = 0
+    slots = out_pad[idx, safe_pos]                            # (S, k, D)
+    w = (gate * keep).astype(F32)[..., None]
+    return jnp.sum(slots.astype(F32) * w, axis=1)
+
+
+def moe_ffn(x, router_w, wg, wu, wd, *, top_k: int, capacity_factor: float,
+            group_size: int):
+    """x: (B, S, D).  Expert weights: wg/wu (E, D, F), wd (E, F, D).
+    Returns (y (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E = router_w.shape[-1]
+    tokens = x.reshape(B * S, D)
+    T = tokens.shape[0]
+    gs = min(group_size, T)
+    while T % gs:
+        gs -= 1
+    G = T // gs
+    xg = tokens.reshape(G, gs, D)
+
+    logits = jnp.einsum("gsd,de->gse", xg, router_w.astype(x.dtype),
+                        preferred_element_type=F32)           # (G, gs, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, top_k)                   # (G, gs, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    C = max(1, int(gs * top_k * capacity_factor / E))
+
+    def per_group(x_g, idx_g, gate_g):
+        e_in, pos, keep = _dispatch_group(x_g, idx_g, gate_g, E, C)
+        h_g = jnp.einsum("ecd,edf->ecf", e_in, wg.astype(e_in.dtype),
+                         preferred_element_type=F32)
+        h_u = jnp.einsum("ecd,edf->ecf", e_in, wu.astype(e_in.dtype),
+                         preferred_element_type=F32)
+        h = (jax.nn.silu(h_g) * h_u).astype(x.dtype)
+        e_out = jnp.einsum("ecf,efd->ecd", h, wd.astype(h.dtype),
+                           preferred_element_type=F32).astype(x.dtype)
+        return _combine_group(e_out, idx_g, pos, keep, gate_g)
+
+    y = jax.vmap(per_group)(xg, idx, gate)                    # (G, gs, D) f32
+
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    one_hot_top1 = jax.nn.one_hot(idx[..., 0].reshape(-1), E, dtype=F32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    return y.reshape(B, S, D).astype(x.dtype), aux

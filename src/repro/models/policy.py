@@ -1,0 +1,54 @@
+"""Training/serving precision policy — the paper's C3 generalized to LMs.
+
+The FFTMatvec mixed-precision framework assigns a precision level to each
+*phase* of the pipeline.  For the LM substrate the analogous phases are:
+parameter storage, forward/backward compute, accumulation, the gradient
+all-reduce (comm), and the KV cache.  ``PrecisionPolicy`` carries one
+dtype per phase; the trainer's gradient compression (optim/grad_compress)
+implements the low-precision-comm phase with error feedback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+_DTYPES = {
+    "float64": jnp.float64, "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16, "float16": jnp.float16,
+    "int8": jnp.int8,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    param_dtype: str = "float32"     # master weights
+    compute_dtype: str = "bfloat16"  # matmul inputs
+    accum_dtype: str = "float32"     # softmax / loss / dot accumulation
+    comm_dtype: str = "bfloat16"     # gradient all-reduce payload
+    cache_dtype: str = "bfloat16"    # KV cache storage
+    logits_dtype: str = "float32"
+
+    def p(self):
+        return _DTYPES[self.param_dtype]
+
+    def c(self):
+        return _DTYPES[self.compute_dtype]
+
+    def a(self):
+        return _DTYPES[self.accum_dtype]
+
+    def k(self):
+        return _DTYPES[self.cache_dtype]
+
+    def l(self):
+        return _DTYPES[self.logits_dtype]
+
+    def comm(self):
+        return _DTYPES[self.comm_dtype]
+
+
+DEFAULT = PrecisionPolicy()
+FULL_F32 = PrecisionPolicy(compute_dtype="float32", comm_dtype="float32",
+                           cache_dtype="float32")

@@ -1,0 +1,98 @@
+"""Logical activation-sharding rules (MaxText-style), applied via a trace-
+time context.
+
+Model code annotates activations with *logical* axis names
+(``constrain(x, "batch", None, "heads", None)``); the launcher installs a
+rules table mapping logical names to physical mesh axes inside
+``jax.set_mesh``.  Without an installed context every constraint is a
+no-op, so tests and single-device runs are unaffected.
+
+Why this exists: GSPMD propagation alone loses the batch sharding through
+flash-attention accumulators (zeros-init carries) and the mean-loss
+cotangent — measured 16x redundant attention compute and a full-batch
+logits all-gather on the baseline (EXPERIMENTS.md §Perf iterations 0a/0b).
+
+Resolution rules:
+  - a logical name maps to a physical axis (str or tuple) or None;
+  - a dim is sharded only if its size divides the axis size;
+  - a physical axis already used by an earlier dim of the same constraint
+    is dropped (e.g. GQA: ``kv_heads`` and ``gqa_groups`` both map to
+    "model" — whichever divides first wins).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "gqa_groups": "model",
+    "embed": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": None,
+    "state": None,
+}
+
+
+@contextlib.contextmanager
+def axis_rules(rules: dict, mesh_shape: dict):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (dict(rules), dict(mesh_shape))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def active() -> bool:
+    return getattr(_state, "ctx", None) is not None
+
+
+def resolve_spec(shape, names) -> P | None:
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return None
+    rules, mesh_shape = ctx
+    used: set[str] = set()
+    entries = []
+    nontrivial = False
+    for dim, name in zip(shape, names):
+        axis = rules.get(name) if name else None
+        if axis is None:
+            entries.append(None)
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        # keep only axes present in this mesh and not already used
+        axes = tuple(a for a in axes if a in mesh_shape and a not in used)
+        if not axes:
+            entries.append(None)
+            continue
+        total = 1
+        for a in axes:
+            total *= mesh_shape[a]
+        if dim % total:
+            entries.append(None)
+            continue
+        used.update(axes)
+        entries.append(axes if len(axes) > 1 else axes[0])
+        nontrivial = True
+    return P(*entries) if nontrivial else None
+
+
+def constrain(x, *names):
+    """Annotate ``x`` (one logical name per dim; None = unconstrained)."""
+    spec = resolve_spec(x.shape, names)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

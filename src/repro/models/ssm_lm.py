@@ -1,0 +1,106 @@
+"""Pure-SSM language model (falcon-mamba-7b): embed -> N x Mamba-1 blocks
+-> norm -> lm_head.  Decode carries per-layer (conv, ssm) states — O(1)
+memory per token, which is why this family runs the long_500k shape."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from .layers import F32
+from .mamba import (init_mamba1_layer, init_ssm_state, mamba1_block,
+                    mamba1_block_lti_fft, mamba1_layer_specs)
+from .transformer import _remat, _shard, scan_or_loop, unembed
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = jax.vmap(lambda k: init_mamba1_layer(cfg, k))(
+        jnp.stack(ks[:cfg.n_layers]))
+    dt = cfg.policy.p()
+    params = {
+        "embed": L.init_embed(ks[-1], cfg.vocab, cfg.d_model, dt),
+        "layers": layers,
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(ks[-2], (cfg.d_model, cfg.vocab), dt)
+    return params
+
+
+def param_specs(cfg: ModelConfig, mesh_shape: dict, *, fsdp="data", tp="model"):
+    lspecs = mamba1_layer_specs(cfg, mesh_shape, fsdp=fsdp, tp=tp)
+    lspecs = jax.tree.map(lambda s: P(None, *s), lspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    specs = {
+        "embed": P(_shard(cfg.vocab, tp, mesh_shape),
+                   _shard(cfg.d_model, fsdp, mesh_shape)),
+        "layers": lspecs,
+        "ln_f": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(_shard(cfg.d_model, fsdp, mesh_shape),
+                             _shard(cfg.vocab, tp, mesh_shape))
+    return specs
+
+
+def forward(cfg: ModelConfig, params, tokens, *, lti_fft_mode: bool = False):
+    h = params["embed"][tokens].astype(cfg.policy.c())
+
+    def body(h, lp):
+        if lti_fft_mode:
+            return mamba1_block_lti_fft(cfg, lp, h), None
+        return mamba1_block(cfg, lp, h)[0], None
+
+    body = _remat(cfg, body)
+    h, _ = scan_or_loop(cfg, body, h, params["layers"])
+    return unembed(cfg, params, h), jnp.zeros((), F32)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int = 0):
+    one = init_ssm_state(cfg, batch, version=1)
+    return {"state": jax.tree.map(
+        lambda x: jnp.zeros((cfg.n_layers, *x.shape), x.dtype), one),
+        "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                       mesh_shape: dict, *, dp, tp="model"):
+    Di = cfg.ssm_expand * cfg.d_model
+    b_ax = _shard(batch, dp, mesh_shape)
+    di_ax = _shard(Di, tp, mesh_shape)
+    return {"state": {"conv": P(None, b_ax, None, di_ax),
+                      "ssm": P(None, b_ax, di_ax, None)},
+            "pos": P()}
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens):
+    """tokens (B, 1) -> (logits, new state).  Constant work per token."""
+    h = params["embed"][tokens].astype(cfg.policy.c())
+
+    def body(h, lp_state):
+        lp, st = lp_state
+        h2, new_st = mamba1_block(cfg, lp, h, state=st)
+        return h2, new_st
+
+    h, new_states = scan_or_loop(cfg, body, h,
+                                 (params["layers"], state["state"]))
+    return unembed(cfg, params, h), {"state": new_states,
+                                     "pos": state["pos"] + 1}
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_seq: int = 0):
+    """Prompt processing, carrying out the final states for decode."""
+    h = params["embed"][tokens].astype(cfg.policy.c())
+
+    def body(h, lp):
+        h2, st = mamba1_block(cfg, lp, h)
+        return h2, st
+
+    h, states = scan_or_loop(cfg, body, h, params["layers"])
+    logits = unembed(cfg, params, h)
+    return logits, {"state": states,
+                    "pos": jnp.full((), tokens.shape[1], jnp.int32)}

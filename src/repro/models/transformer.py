@@ -1,0 +1,315 @@
+"""Decoder-only transformer LM (dense GQA / MoE / VLM-backbone families).
+
+Covers llama3-405b, qwen1.5-0.5b/110b (QKV bias), minicpm-2b, grok-1-314b
+and granite-moe (MoE FFN), and the phi-3-vision backbone (stub patch
+embeddings prepended to the token embeddings).
+
+Per-layer parameters are stacked on a leading L axis and the forward pass
+``lax.scan``s over layers (bounded HLO for 512-device dry-runs);
+activation remat policy per config.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from .layers import F32
+from .moe import moe_ffn
+from .sharding_ctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    dt = cfg.policy.p()
+    Dh = cfg.head_dim()
+    Hq, Hkv, D, F, Lyr = cfg.n_heads, cfg.n_kv, cfg.d_model, cfg.d_ff, cfg.n_layers
+    ks = jax.random.split(key, 16)
+
+    layers = {
+        "ln1": jnp.ones((Lyr, D), dt),
+        "wq": L.init_dense(ks[0], (Lyr, D, Hq * Dh), dt),
+        "wk": L.init_dense(ks[1], (Lyr, D, Hkv * Dh), dt),
+        "wv": L.init_dense(ks[2], (Lyr, D, Hkv * Dh), dt),
+        "wo": L.init_dense(ks[3], (Lyr, Hq * Dh, D), dt),
+        "ln2": jnp.ones((Lyr, D), dt),
+    }
+    if cfg.qkv_bias:
+        layers |= {"bq": jnp.zeros((Lyr, Hq * Dh), dt),
+                   "bk": jnp.zeros((Lyr, Hkv * Dh), dt),
+                   "bv": jnp.zeros((Lyr, Hkv * Dh), dt)}
+    if cfg.n_experts:
+        E = cfg.n_experts
+        layers |= {
+            "router": L.init_dense(ks[4], (Lyr, D, E), jnp.float32),
+            "wg": L.init_dense(ks[5], (Lyr, E, D, F), dt),
+            "wu": L.init_dense(ks[6], (Lyr, E, D, F), dt),
+            "wd": L.init_dense(ks[7], (Lyr, E, F, D), dt),
+        }
+    else:
+        layers |= {
+            "wg": L.init_dense(ks[5], (Lyr, D, F), dt),
+            "wu": L.init_dense(ks[6], (Lyr, D, F), dt),
+            "wd": L.init_dense(ks[7], (Lyr, F, D), dt),
+        }
+    params = {
+        "embed": L.init_embed(ks[8], cfg.vocab, D, dt),
+        "layers": layers,
+        "ln_f": jnp.ones((D,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(ks[9], (D, cfg.vocab), dt)
+    return params
+
+
+def _shard(size: int, axis, mesh_shape: dict):
+    """Shard a dim over ``axis`` only if divisible (else replicate)."""
+    if axis is None:
+        return None
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    total = 1
+    for a in axes:
+        if a not in mesh_shape:
+            return None
+        total *= mesh_shape[a]
+    return axis if size % total == 0 else None
+
+
+def param_specs(cfg: ModelConfig, mesh_shape: dict, *, fsdp: str | None = "data",
+                tp: str = "model"):
+    """PartitionSpec pytree matching :func:`init_params` structure."""
+    Dh = cfg.head_dim()
+    Hq, Hkv, D, F = cfg.n_heads, cfg.n_kv, cfg.d_model, cfg.d_ff
+    V = cfg.vocab
+    f = lambda size: _shard(size, fsdp, mesh_shape)
+    t = lambda size: _shard(size, tp, mesh_shape)
+
+    layers = {
+        "ln1": P(None, None),
+        "wq": P(None, f(D), t(Hq * Dh)),
+        "wk": P(None, f(D), t(Hkv * Dh)),
+        "wv": P(None, f(D), t(Hkv * Dh)),
+        "wo": P(None, t(Hq * Dh), f(D)),
+        "ln2": P(None, None),
+    }
+    if cfg.qkv_bias:
+        layers |= {"bq": P(None, t(Hq * Dh)), "bk": P(None, t(Hkv * Dh)),
+                   "bv": P(None, t(Hkv * Dh))}
+    if cfg.n_experts:
+        layers |= {
+            "router": P(None, f(D), None),
+            "wg": P(None, None, f(D), t(F)),
+            "wu": P(None, None, f(D), t(F)),
+            "wd": P(None, None, t(F), f(D)),
+        }
+    else:
+        layers |= {"wg": P(None, f(D), t(F)), "wu": P(None, f(D), t(F)),
+                   "wd": P(None, t(F), f(D))}
+    specs = {
+        "embed": P(t(V), f(D)),
+        "layers": layers,
+        "ln_f": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(f(D), t(V))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _attn_block(cfg: ModelConfig, lp, h, positions, *, cache=None,
+                cache_pos=None, return_kv: bool = False):
+    """Pre-norm attention block.  With ``cache`` (k, v buffers (B,Smax,Hkv,Dh))
+    runs single/multi-token decode against the cache; returns (out, kv)."""
+    B, S, D = h.shape
+    Dh = cfg.head_dim()
+    x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+    q = L.dense(x, lp["wq"], lp.get("bq"))
+    k = L.dense(x, lp["wk"], lp.get("bk"))
+    v = L.dense(x, lp["wv"], lp.get("bv"))
+    q = constrain(q.reshape(B, S, cfg.n_heads, Dh),
+                  "batch", None, "heads", None)
+    k = constrain(k.reshape(B, S, cfg.n_kv, Dh),
+                  "batch", None, "kv_heads", None)
+    v = constrain(v.reshape(B, S, cfg.n_kv, Dh),
+                  "batch", None, "kv_heads", None)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        o = L.attention(q, k, v, causal=True, cfg=cfg)
+        new_kv = (k, v) if return_kv else None
+    else:
+        ck, cv = cache
+        kdt = ck.dtype
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(kdt), cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(kdt), cache_pos, axis=1)
+        o = L.attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                        causal=True, cfg=cfg, q_offset=cache_pos)
+        new_kv = (ck, cv)
+    o = o.reshape(B, S, cfg.n_heads * Dh)
+    return L.dense(o, lp["wo"]), new_kv
+
+
+def _ffn_block(cfg: ModelConfig, lp, h):
+    x = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        y, aux = moe_ffn(x, lp["router"], lp["wg"], lp["wu"], lp["wd"],
+                         top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                         group_size=cfg.moe_group)
+        return y, aux
+    return L.swiglu(x, lp["wg"], lp["wu"], lp["wd"]), 0.0
+
+
+def _layer(cfg: ModelConfig, h, lp, positions, cache=None, cache_pos=None,
+           return_kv: bool = False):
+    a, new_kv = _attn_block(cfg, lp, h, positions, cache=cache,
+                            cache_pos=cache_pos, return_kv=return_kv)
+    h = h + a
+    f, aux = _ffn_block(cfg, lp, h)
+    return h + f, aux, new_kv
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.checkpoint_dots
+              if cfg.remat == "dots" else
+              jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def scan_or_loop(cfg: ModelConfig, body, carry, xs):
+    """``lax.scan`` over a stacked layer pytree, or an unrolled python loop
+    when ``cfg.scan_layers`` is False (analysis mode: HloCostAnalysis counts
+    while bodies once, so the dry-run unrolls reduced layer counts)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda v: v[i], xs))
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens, extra_embeds=None):
+    """Token embedding lookup; VLM prepends stub patch embeddings."""
+    h = params["embed"][tokens].astype(cfg.policy.c())
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    return constrain(h, "batch", None, "embed")
+
+
+def unembed(cfg: ModelConfig, params, h):
+    x = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.dot(x, head.astype(x.dtype), preferred_element_type=F32)
+    return constrain(logits.astype(cfg.policy.l()), "batch", None, "vocab")
+
+
+def forward(cfg: ModelConfig, params, tokens, *, extra_embeds=None):
+    """Training/prefill forward: logits (B, S_total, V) + aux losses."""
+    h = embed_tokens(cfg, params, tokens, extra_embeds)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(carry, lp):
+        h, aux = carry
+        h2, a, _ = _layer(cfg, h, lp, positions)
+        return (h2, aux + jnp.asarray(a, F32)), None
+
+    body = _remat(cfg, body)
+    (h, aux), _ = scan_or_loop(cfg, body, (h, jnp.zeros((), F32)),
+                               params["layers"])
+    return unembed(cfg, params, h), aux / cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# KV cache serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    kdt = cfg.policy.k()
+    Dh = cfg.head_dim()
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv, Dh)
+    return {"k": jnp.zeros(shape, kdt), "v": jnp.zeros(shape, kdt),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int, mesh_shape: dict,
+                *, dp, tp: str = "model"):
+    """Shard the KV cache.
+
+    - batch over ``dp`` when divisible;
+    - kv-heads over ``tp`` when divisible, else the *sequence* axis over
+      ``tp`` (flash-decoding style: SPMD turns the softmax into partial
+      reductions + an all-reduce over the sharded sequence);
+    - batch=1 long-context: shard the sequence over every axis that divides.
+    """
+    dp_axes = dp if isinstance(dp, tuple) else (dp,)
+    dp_ax = _shard(batch, dp, mesh_shape)
+    head_ax = _shard(cfg.n_kv, tp, mesh_shape)
+    seq_ax = None
+    if dp_ax is None:
+        # long-context decode (batch < dp): spread the cache sequence wide
+        seq_ax = _shard(max_seq, dp_axes + (tp,), mesh_shape)
+        head_ax = None
+    elif head_ax is None:
+        seq_ax = _shard(max_seq, tp, mesh_shape)
+    kv_spec = P(None, dp_ax, seq_ax, head_ax, None)
+    return {"k": kv_spec, "v": kv_spec, "pos": P()}
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    """One-token decode: tokens (B, 1) + cache -> (logits (B, 1, V), cache)."""
+    h = embed_tokens(cfg, params, tokens)
+    B = h.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos, (B, 1))
+
+    def body(h, lp_kv):
+        lp, ck, cv = lp_kv
+        h2, _, new_kv = _layer(cfg, h, lp, positions, cache=(ck, cv),
+                               cache_pos=pos)
+        return h2, new_kv
+
+    h, (new_k, new_v) = scan_or_loop(
+        cfg, body, h, (params["layers"], cache["k"], cache["v"]))
+    logits = unembed(cfg, params, h)
+    return logits, {"k": new_k, "v": new_v, "pos": pos + 1}
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_seq: int, *,
+            extra_embeds=None):
+    """Prompt processing: returns (logits, filled cache)."""
+    h = embed_tokens(cfg, params, tokens, extra_embeds)
+    B, S, _ = h.shape
+    kdt = cfg.policy.k()
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pad = max_seq - S
+
+    def body(h, lp):
+        h2, _, (k, v) = _layer(cfg, h, lp, positions, return_kv=True)
+        kc = jnp.pad(k.astype(kdt), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v.astype(kdt), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return h2, (kc, vc)
+
+    h, (ks, vs) = scan_or_loop(cfg, body, h, params["layers"])
+    logits = unembed(cfg, params, h)
+    cache = {"k": ks, "v": vs, "pos": jnp.full((), S, jnp.int32)}
+    return logits, cache

@@ -1,0 +1,2 @@
+from .adamw import AdamW, cosine_schedule, wsd_schedule, constant_schedule  # noqa: F401
+from .grad_compress import Compressor  # noqa: F401

@@ -1,0 +1,2 @@
+from .trainer import Trainer, TrainerConfig, PreemptionRequested  # noqa: F401
+from .serve import ServeEngine, Request, Result  # noqa: F401

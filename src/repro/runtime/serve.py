@@ -1,0 +1,103 @@
+"""Batched serving loop: continuous batching over a request queue with a
+prefill/decode split, greedy or temperature sampling.
+
+The serving engine batches compatible requests (same padded prompt
+bucket), runs one jitted prefill to build the decode state, then steps a
+jitted single-token decode until every sequence hits EOS or max tokens.
+Works for every family via models.api (KV-cache transformers, SSM state
+decoders, enc-dec with cross-attention caches).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    extras: dict | None = None      # vlm patch embeds / encdec frames
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: np.ndarray
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, max_seq: int = 512,
+                 temperature: float = 0.0, eos_id: Optional[int] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, b: api.prefill_step(cfg, p, b, max_seq))
+        self._decode = jax.jit(
+            lambda p, s, t: api.decode_step(cfg, p, s, t))
+
+    def _sample(self, logits):
+        logits = logits[:, -1, :].astype(jnp.float32)
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.temperature, -1)
+
+    def run_batch(self, requests: list[Request]) -> list[Result]:
+        """One continuous-batching round over same-length-bucket requests."""
+        B = len(requests)
+        S = max(len(r.prompt) for r in requests)
+        prompts = np.full((B, S), 0, np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, S - len(r.prompt):] = r.prompt      # left-pad
+        batch = {"tokens": jnp.asarray(prompts)}
+        if requests[0].extras:
+            for k, v in requests[0].extras.items():
+                batch[k] = jnp.stack(
+                    [jnp.asarray(r.extras[k]) for r in requests])
+
+        logits, state = self._prefill(self.params, batch)
+        tok = self._sample(logits)
+        max_new = max(r.max_new_tokens for r in requests)
+        out = [tok]
+        done = np.zeros((B,), bool)
+        for _ in range(max_new - 1):
+            logits, state = self._decode(self.params, state, tok[:, None])
+            tok = self._sample(logits)
+            out.append(tok)
+            if self.eos_id is not None:
+                done |= np.asarray(tok) == self.eos_id
+                if done.all():
+                    break
+        gen = np.stack([np.asarray(t) for t in out], axis=1)  # (B, T)
+        results = []
+        for i, r in enumerate(requests):
+            t = gen[i][: r.max_new_tokens]
+            if self.eos_id is not None and (t == self.eos_id).any():
+                t = t[: int(np.argmax(t == self.eos_id)) + 1]
+            results.append(Result(r.uid, t))
+        return results
+
+    def serve(self, requests: list[Request], bucket: int = 128) -> list[Result]:
+        """Group requests into prompt-length buckets, run each batch."""
+        buckets: dict[int, list[Request]] = {}
+        for r in requests:
+            b = (len(r.prompt) + bucket - 1) // bucket
+            buckets.setdefault(b, []).append(r)
+        results = []
+        for _, reqs in sorted(buckets.items()):
+            results.extend(self.run_batch(reqs))
+        return sorted(results, key=lambda r: r.uid)

@@ -1,0 +1,18 @@
+"""Test configuration.
+
+x64 is enabled globally so the paper-faithful FP64 precision ladder is
+testable; all model code is dtype-explicit, so LM tests are unaffected.
+Tests see exactly ONE device (the dry-run's 512-device XLA_FLAGS is set
+only inside repro.launch.dryrun subprocesses).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

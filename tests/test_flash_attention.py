@@ -1,0 +1,63 @@
+"""Flash-attention Pallas kernel vs the pure-jnp oracle (interpret mode),
+sweeping shapes, GQA ratios, dtypes and causality; plus consistency with
+the production chunked attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+
+CASES = [
+    # B, Sq, Skv, Hq, Hkv, Dh
+    (1, 128, 128, 2, 2, 32),
+    (2, 256, 256, 4, 1, 64),      # MQA
+    (2, 128, 256, 8, 2, 32),      # GQA, cross lengths (non-causal only)
+    (1, 384, 384, 2, 2, 128),
+]
+
+
+@pytest.mark.parametrize("B,Sq,Skv,Hq,Hkv,Dh", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_oracle(B, Sq, Skv, Hq, Hkv, Dh, dtype):
+    causal = Sq == Skv
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    mk = lambda key, s, h: (jax.random.normal(key, (B, s, h, Dh), jnp.float32)
+                            .astype(dtype))
+    q, k, v = mk(ks[0], Sq, Hq), mk(ks[1], Skv, Hkv), mk(ks[2], Skv, Hkv)
+    got = flash_attention(q, k, v, causal=causal, q_block=64, kv_block=128,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_matches_chunked_attention():
+    """The kernel and the production jnp chunked attention agree."""
+    from repro.models.layers import chunked_attention
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S, H, Dh = 2, 256, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, Dh), jnp.float32)
+    a = chunked_attention(q, k, v, causal=True, q_chunk=64, kv_chunk=64)
+    b = flash_attention(q, k, v, causal=True, q_block=64, kv_block=64,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_odd_blocks():
+    """Wrapper shrinks blocks to divisors of odd sequence lengths."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, S, H, Dh = 1, 96, 2, 32   # 96 % 64 != 0 -> falls back to 48/32
+    q = jax.random.normal(ks[0], (B, S, H, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, Dh), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

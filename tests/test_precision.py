@@ -1,0 +1,112 @@
+"""Mixed-precision framework: the paper's 32 configurations, error
+ordering, the mantissa-bit trick, and the eq.-(6) error model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FFTMatvec, PrecisionConfig, all_configs,
+                        dense_matvec, machine_eps, random_block_column,
+                        random_unrepresentable, rel_l2)
+from repro.core.error_model import dominant_phase, relative_error_bound
+from repro.core.precision import min_level
+
+
+def test_32_configs():
+    cfgs = list(all_configs(("d", "s")))
+    assert len(cfgs) == 32
+    assert len({c.to_string() for c in cfgs}) == 32
+    assert len(list(all_configs(("d", "s", "h")))) == 243
+
+
+def test_string_roundtrip():
+    for s in ["ddddd", "dssdd", "ddssd", "dssds", "hhhhh", "shshs"]:
+        assert PrecisionConfig.from_string(s).to_string() == s
+    with pytest.raises(ValueError):
+        PrecisionConfig.from_string("dd")
+    with pytest.raises(ValueError):
+        PrecisionConfig.from_string("ddxdd")
+
+
+def test_min_level():
+    assert min_level("d", "s") == "s"
+    assert min_level("s", "h") == "h"
+    assert min_level("d", "d") == "d"
+
+
+def _errors_for(configs, Nt=32, Nd=4, Nm=64):
+    key = jax.random.PRNGKey(0)
+    F_col = random_unrepresentable(key, (Nt, Nd, Nm)) / np.sqrt(Nm)
+    m = random_unrepresentable(jax.random.PRNGKey(1), (Nm, Nt))
+    ref = dense_matvec(F_col, m)
+    out = {}
+    for cfg in configs:
+        op = FFTMatvec.from_block_column(F_col, precision=cfg)
+        out[cfg.to_string()] = rel_l2(op.matvec(m), ref)
+    return out
+
+
+def test_error_ordering_matches_paper():
+    """All-double is exact-ish; single phases add ~1e-7; bf16 adds ~1e-2;
+    and the paper's optimal config (fft+gemv single) sits at single-level
+    error."""
+    errs = _errors_for([PrecisionConfig.from_string(s)
+                        for s in ["ddddd", "dssdd", "sssss", "hhhhh"]])
+    assert errs["ddddd"] < 1e-14
+    assert 1e-9 < errs["dssdd"] < 1e-5
+    assert 1e-9 < errs["sssss"] < 1e-5
+    assert errs["hhhhh"] > 1e-4
+    assert errs["ddddd"] < errs["dssdd"] <= errs["hhhhh"]
+
+
+def test_mantissa_trick_forces_pad_error():
+    """Without unrepresentable inputs, a single-precision pad phase is
+    error-free and biases the Pareto front (paper §4.2.1); with the trick
+    the pad phase must incur error."""
+    Nt, Nd, Nm = 16, 3, 8
+    F_col = random_block_column(jax.random.PRNGKey(0), Nt, Nd, Nm,
+                                dtype=jnp.float32).astype(jnp.float64)
+    m_repr = jax.random.normal(jax.random.PRNGKey(1), (Nm, Nt),
+                               dtype=jnp.float32).astype(jnp.float64)
+    m_unrepr = random_unrepresentable(jax.random.PRNGKey(1), (Nm, Nt))
+    cfg = PrecisionConfig.from_string("sdddd")
+    op = FFTMatvec.from_block_column(F_col, precision=cfg)
+    ref = FFTMatvec.from_block_column(F_col)
+    e_repr = rel_l2(op.matvec(m_repr), ref.matvec(m_repr))
+    e_unrepr = rel_l2(op.matvec(m_unrepr), ref.matvec(m_unrepr))
+    assert e_repr < 1e-14           # f32-representable input: pad lossless
+    assert e_unrepr > 1e-9          # unrepresentable input: pad truncates
+
+
+def test_error_bound_eq6_holds():
+    """Measured relative error stays below eq. (6) with O(1) constants
+    (kappa estimated from the dense matrix)."""
+    Nt, Nd, Nm = 16, 3, 24
+    key = jax.random.PRNGKey(2)
+    F_col = random_unrepresentable(key, (Nt, Nd, Nm)) / np.sqrt(Nm)
+    m = random_unrepresentable(jax.random.PRNGKey(3), (Nm, Nt))
+    from repro.core import dense_from_block_column
+    kappa = float(jnp.linalg.cond(dense_from_block_column(F_col)))
+    ref = dense_matvec(F_col, m)
+    for s in ["sssss", "dssdd", "ddddd", "hhhhh"]:
+        cfg = PrecisionConfig.from_string(s)
+        op = FFTMatvec.from_block_column(F_col, precision=cfg)
+        err = rel_l2(op.matvec(m), ref)
+        bound = relative_error_bound(cfg, Nt, Nd, Nm, kappa=kappa,
+                                     constants={"c3": 8.0})
+        assert err <= bound, (s, err, bound)
+
+
+def test_dominant_phase_is_gemv():
+    """Paper §3.2.1: 'the dominant error term comes from the SBGEMV'."""
+    cfg = PrecisionConfig.from_string("sssss")
+    assert dominant_phase(cfg, N_t=1000, N_d=100, N_m=5000) == "gemv"
+    # adjoint with few sensors: gemv term shrinks to n_d
+    assert dominant_phase(cfg, 1000, 100, 5000, adjoint=True) in ("gemv", "fft")
+
+
+def test_machine_eps():
+    assert machine_eps("d") == 2.0 ** -53
+    assert machine_eps("s") == 2.0 ** -24
+    assert machine_eps("h") == 2.0 ** -8

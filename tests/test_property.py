@@ -1,0 +1,121 @@
+"""Hypothesis property-based tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FFTMatvec, PrecisionConfig, dense_matvec,
+                        random_block_column, rel_l2)
+from repro.core.error_model import relative_error_bound
+from repro.core.pareto import ConfigRecord, optimal_config, pareto_front
+from repro.core.precision import all_configs, machine_eps
+from repro.kernels import ops, ref
+
+dims = st.tuples(st.integers(2, 12), st.integers(1, 5), st.integers(1, 9))
+
+
+@settings(max_examples=15, deadline=None)
+@given(dims, st.integers(0, 2 ** 31 - 1))
+def test_matvec_linearity(d, seed):
+    """F(a m1 + b m2) == a F m1 + b F m2 (the operator is linear)."""
+    Nt, Nd, Nm = d
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    F_col = random_block_column(ks[0], Nt, Nd, Nm, dtype=jnp.float64)
+    op = FFTMatvec.from_block_column(F_col)
+    m1 = jax.random.normal(ks[1], (Nm, Nt), dtype=jnp.float64)
+    m2 = jax.random.normal(ks[2], (Nm, Nt), dtype=jnp.float64)
+    lhs = op.matvec(2.5 * m1 - 0.5 * m2)
+    rhs = 2.5 * op.matvec(m1) - 0.5 * op.matvec(m2)
+    assert rel_l2(lhs, rhs) < 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(dims, st.integers(0, 2 ** 31 - 1))
+def test_matvec_time_invariance(d, seed):
+    """Shifting the input in time shifts the output (LTI property of the
+    p2o map): F shift(m) == shift(F m) for causal shifts."""
+    Nt, Nd, Nm = d
+    if Nt < 3:
+        return
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 2)
+    F_col = random_block_column(ks[0], Nt, Nd, Nm, dtype=jnp.float64)
+    op = FFTMatvec.from_block_column(F_col)
+    m = jax.random.normal(ks[1], (Nm, Nt), dtype=jnp.float64)
+    m_shift = jnp.pad(m[:, :-1], ((0, 0), (1, 0)))
+    out_shift = op.matvec(m_shift)
+    shifted_out = jnp.pad(op.matvec(m)[:, :-1], ((0, 0), (1, 0)))
+    assert rel_l2(out_shift, shifted_out) < 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 24), st.integers(16, 200),
+       st.sampled_from(["N", "T", "H"]), st.integers(0, 2 ** 31 - 1))
+def test_sbgemv_matches_oracle(B, m, n, mode, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    xdim = m if mode in ("T", "H") else n
+    Ar = jax.random.normal(ks[0], (B, m, n), jnp.float32)
+    Ai = jax.random.normal(ks[1], (B, m, n), jnp.float32)
+    xr = jax.random.normal(ks[2], (B, xdim), jnp.float32)
+    xi = jax.random.normal(ks[3], (B, xdim), jnp.float32)
+    got = ops.sbgemv(Ar, Ai, xr, xi, mode, use_pallas=True, interpret=True,
+                     block_n=128)
+    want = ref.sbgemv_complex_ref(Ar, Ai, xr, xi, mode)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.floats(1e-6, 10), st.floats(1e-12, 1)),
+                min_size=1, max_size=30))
+def test_pareto_front_is_nondominated(points):
+    recs = [ConfigRecord(PrecisionConfig(), err, t)
+            for t, err in points]
+    front = pareto_front(recs)
+    assert front, "front never empty"
+    for f in front:
+        assert not any(o.time_s < f.time_s and o.rel_error <= f.rel_error
+                       for o in recs)
+    # optimal config at any tolerance is on the front
+    tol = max(r.rel_error for r in recs)
+    best = optimal_config(recs, tol)
+    assert not any(o.time_s < best.time_s and o.rel_error <= tol
+                   for o in recs)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from([c.to_string() for c in all_configs(("d", "s", "h"))]))
+def test_error_bound_monotone_in_precision(s):
+    """Raising any phase's precision can only lower the eq.-(6) bound."""
+    cfg = PrecisionConfig.from_string(s)
+    b = relative_error_bound(cfg, 64, 8, 32)
+    for phase in ("pad", "fft", "gemv", "ifft", "reduce"):
+        lvl = getattr(cfg, phase)
+        if lvl == "d":
+            continue
+        up = {"h": "s", "s": "d"}[lvl]
+        b_up = relative_error_bound(cfg.replace(**{phase: up}), 64, 8, 32)
+        assert b_up <= b + 1e-30
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 10), st.integers(1, 4), st.integers(1, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_precision_ladder_error_ordering(Nt, Nd, Nm, seed):
+    """Measured error is (weakly) monotone across the h < s < d ladder."""
+    key = jax.random.PRNGKey(seed)
+    F_col = random_block_column(key, Nt, Nd, Nm, dtype=jnp.float64)
+    m = jax.random.normal(jax.random.fold_in(key, 1), (Nm, Nt),
+                          dtype=jnp.float64)
+    ref_out = dense_matvec(F_col, m)
+    errs = {}
+    for lvl in ("d", "s", "h"):
+        op = FFTMatvec.from_block_column(
+            F_col, precision=PrecisionConfig(*([lvl] * 5)))
+        errs[lvl] = rel_l2(op.matvec(m), ref_out)
+    assert errs["d"] <= errs["s"] * 1.01 + 1e-12
+    assert errs["s"] <= errs["h"] * 1.01 + 1e-12
