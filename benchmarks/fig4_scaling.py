@@ -36,7 +36,8 @@ import jax, json
 jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp, time, re
 from repro.core import FFTMatvec, PrecisionConfig, random_block_column, rel_l2, dense_matvec
-mesh = jax.make_mesh((1, 8), ("row", "col"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.jax_compat import make_mesh
+mesh = make_mesh((1, 8), ("row", "col"))
 Nt, Nd, Nm = 128, 16, 8 * 200
 F_col = random_block_column(jax.random.PRNGKey(0), Nt, Nd, Nm, dtype=jnp.float64)
 m = jax.random.normal(jax.random.PRNGKey(1), (Nm, Nt), dtype=jnp.float64)

@@ -1,0 +1,72 @@
+"""Figure 5 (extension): multi-RHS FFTMatvec + Krylov solver throughput.
+
+The paper's outer loop applies F / F* to *blocks* of vectors (Hessian
+columns, sensor-placement candidates — Remark 1).  This bench measures
+what batching buys:
+
+  - ``matmat`` throughput vs S stacked RHS against S independent
+    ``matvec`` calls (amortized per-RHS time; the SBGEMM path reads each
+    F_hat tile once per S columns instead of once per column);
+  - an LSQR MAP solve driven by ``matmat`` for a batch of observation
+    blocks vs solving them one at a time.
+
+Derived columns: per-RHS microseconds and the speedup over the S = 1
+baseline.  CPU-feasible sizes; the TPU numbers come from the dry-run
+roofline as usual.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro import solvers
+from repro.core import FFTMatvec, MatvecOptions, PrecisionConfig, random_block_column
+from .common import row, time_fn
+
+N_T, N_D, N_M = 64, 8, 256
+RHS_SWEEP = (1, 2, 4, 8, 16)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    F_col = random_block_column(key, N_T, N_D, N_M, dtype=jnp.float32)
+    op = FFTMatvec.from_block_column(
+        F_col, precision=PrecisionConfig.from_string("sssss"),
+        opts=MatvecOptions(use_pallas=False))
+    matvec, _ = op.jitted()
+    matmat, _ = op.jitted_block()
+
+    m1 = jax.random.normal(jax.random.PRNGKey(1), (N_M, N_T), jnp.float32)
+    t1 = time_fn(matvec, m1, repeats=5)
+    row("fig5/matvec_S1", t1, "per_rhs_us=%.1f" % (t1 * 1e6))
+
+    for S in RHS_SWEEP:
+        M = jax.random.normal(jax.random.PRNGKey(2), (N_M, N_T, S),
+                              jnp.float32)
+        t = time_fn(matmat, M, repeats=5)
+        row(f"fig5/matmat_S{S}", t,
+            f"per_rhs_us={t / S * 1e6:.1f};speedup_vs_stacked={S * t1 / t:.2f}")
+
+    # solver leg: one shared-matmat LSQR solve for S observation blocks
+    S = 8
+    M_true = jax.random.normal(jax.random.PRNGKey(3), (N_M, N_T, S),
+                               jnp.float32)
+    D = matmat(M_true)
+    it = 25
+
+    def solve_batched():
+        return solvers.lsqr(op, D, tol=0.0, maxiter=it).x
+
+    def solve_looped():
+        return jnp.stack([solvers.lsqr(op, D[..., s], tol=0.0, maxiter=it).x
+                          for s in range(S)], axis=-1)
+
+    tb = time_fn(lambda: solve_batched(), repeats=2)
+    tl = time_fn(lambda: solve_looped(), repeats=2)
+    row(f"fig5/lsqr_batched_S{S}_it{it}", tb,
+        f"per_rhs_us={tb / S * 1e6:.0f}")
+    row(f"fig5/lsqr_looped_S{S}_it{it}", tl,
+        f"per_rhs_us={tl / S * 1e6:.0f};batched_speedup={tl / tb:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,11 @@
    (every Hessian action = one F and one F* FFT matvec);
 4. compare double-precision vs the paper's optimal mixed-precision config
    for the reconstruction, and report the expected information gain
-   (the optimal-sensor-placement objective of Remark 1).
+   (the optimal-sensor-placement objective of Remark 1);
+5. re-solve with the Krylov subsystem (LSQR / CGNR, repro.solvers) and
+   reconstruct a whole batch of noise realizations at once through the
+   multi-RHS ``matmat`` path — the outer-loop workload (Remark 1) the
+   batched SBGEMM kernels exist for.
 
     PYTHONPATH=src python examples/inverse_problem.py
 """
@@ -21,6 +25,7 @@ import numpy as np  # noqa: E402
 
 from repro.core import (FFTMatvec, GaussianInverseProblem,  # noqa: E402
                         PrecisionConfig, heat_equation_p2o, rel_l2)
+from repro import solvers  # noqa: E402
 
 
 def main():
@@ -64,6 +69,35 @@ def main():
     print(f"  data misfit      : {rel_l2(op_mixed.matvec(m_map2), d_obs):.3e}")
     print(f"  vs f64 MAP point : {rel_l2(m_map2, m_map):.3e} "
           f"(below the noise floor -> mixed precision is free accuracy-wise)")
+
+    print("=== Krylov subsystem: LSQR / CGNR on the factored problem ===")
+    m_lsqr, res_lsqr = prob.map_point_krylov(d_obs, method="lsqr",
+                                             tol=1e-10, maxiter=500)
+    print(f"  LSQR iters       : {res_lsqr.n_iters} "
+          f"(relres {float(res_lsqr.final_relres.max()):.2e})")
+    print(f"  vs CG MAP point  : {rel_l2(m_lsqr, m_map):.3e}")
+    m_cgnr, res_cgnr = prob.map_point_krylov(d_obs, method="cgnr",
+                                             tol=1e-10, maxiter=500)
+    print(f"  CGNR iters       : {res_cgnr.n_iters} "
+          f"(relres {float(res_cgnr.final_relres.max()):.2e})")
+
+    print("=== multi-RHS: reconstruct a batch of noise realizations ===")
+    S = 8
+    noise = noise_sigma * jax.random.normal(
+        jax.random.PRNGKey(7), (*d_clean.shape, S), d_clean.dtype)
+    D_obs = d_clean[..., None] + noise               # (N_d, N_t, S) stacked
+    M_batch, res_b = prob_mixed.map_point_krylov(
+        D_obs, method="lsqr", tol=1e-8, maxiter=500,
+        solver_precision=solvers.SolverPrecision.from_string("sss"))
+    D_fit = op_mixed.matmat(M_batch)
+    misfits = [rel_l2(D_fit[..., s], D_obs[..., s]) for s in range(S)]
+    spread = float(jnp.std(M_batch, axis=-1).mean())
+    print(f"  {S} noise realizations in {res_b.n_iters} shared-matmat "
+          f"LSQR iterations (one SBGEMM pipeline per iteration)")
+    print(f"  data misfit      : max {max(misfits):.3e} "
+          f"(all at the noise level, as expected)")
+    print(f"  MAP sampling std : {spread:.3e} per parameter "
+          f"(posterior variability across realizations)")
 
     print("=== optimal experimental design ingredient (Remark 1) ===")
     ig = float(prob.expected_information_gain())

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.jax_compat import shard_map
 from repro.kernels import ops as kops
 from . import precision as prec
 from .precision import PrecisionConfig
@@ -47,6 +48,7 @@ class MatvecOptions:
     interpret: bool = False          # Pallas interpret mode (CPU validation)
     fuse_pad_cast: bool = False      # use the fused Pallas pad+cast kernels
     block_n: int = 512               # SBGEMV column-tile size
+    block_s: int = 128               # SBGEMM RHS-tile size (multi-RHS path)
 
 
 # ---------------------------------------------------------------------------
@@ -81,6 +83,24 @@ def reorder_tosi_to_soti(re, im, level: str):
     return re.astype(dt).T, im.astype(dt).T
 
 
+def reorder_soti_to_tosi_block(re, im, S: int, level: str):
+    """Multi-RHS reorder: stacked SOTI planes (S*R, K) -> TOSI panels
+    (K, R, S) with the RHS axis minor, at the lowest-adjacent level."""
+    dt = prec.real_dtype(level)
+    SR, K = re.shape
+    R = SR // S
+    f = lambda x: x.astype(dt).reshape(S, R, K).transpose(2, 1, 0)
+    return f(re), f(im)
+
+
+def reorder_tosi_to_soti_block(re, im, level: str):
+    """TOSI panels (K, R, S) -> stacked SOTI planes (S*R, K)."""
+    dt = prec.real_dtype(level)
+    K, R, S = re.shape
+    f = lambda x: x.astype(dt).transpose(2, 1, 0).reshape(S * R, K)
+    return f(re), f(im)
+
+
 def phase3_gemv(F_re, F_im, x_re, x_im, cfg: PrecisionConfig,
                 opts: MatvecOptions, adjoint: bool):
     """Fourier-space block-diagonal matvec: for every frequency bin k,
@@ -91,6 +111,19 @@ def phase3_gemv(F_re, F_im, x_re, x_im, cfg: PrecisionConfig,
                        x_re.astype(dt), x_im.astype(dt), mode,
                        out_dtype=dt, use_pallas=opts.use_pallas,
                        block_n=opts.block_n, interpret=opts.interpret)
+
+
+def phase3_gemm(F_re, F_im, X_re, X_im, cfg: PrecisionConfig,
+                opts: MatvecOptions, adjoint: bool):
+    """Multi-RHS Phase 3: per frequency bin, an (N_d x n) x (n x S) block
+    matmul.  X panels are TOSI with the RHS axis minor: (K, R, S)."""
+    dt = prec.real_dtype(cfg.gemv)
+    mode = "H" if adjoint else "N"
+    return kops.sbgemm(F_re.astype(dt), F_im.astype(dt),
+                       X_re.astype(dt), X_im.astype(dt), mode,
+                       out_dtype=dt, use_pallas=opts.use_pallas,
+                       block_n=opts.block_n, block_s=opts.block_s,
+                       interpret=opts.interpret)
 
 
 def phase4_ifft(re, im, N_t: int, cfg: PrecisionConfig):
@@ -129,6 +162,28 @@ def _local_matvec(F_re, F_im, m, N_t: int, cfg: PrecisionConfig,
     return phase5_unpad(y, N_t, cfg, opts)                            # ph 5a
 
 
+def _local_matmat(F_re, F_im, M, N_t: int, cfg: PrecisionConfig,
+                  opts: MatvecOptions, adjoint: bool):
+    """Multi-RHS per-shard pipeline.  ``M`` is (R, N_t, S): S stacked SOTI
+    block vectors, RHS axis minor.  Phases 1/2/4/5 run on a flattened
+    (S*R, time) layout — identical codepaths (and fused Pallas pad/cast
+    kernels) as the single-RHS case, with S amortizing the per-phase
+    launch cost; Phase 3 becomes an MXU-friendly SBGEMM."""
+    R, _, S = M.shape
+    flat = M.transpose(2, 0, 1).reshape(S * R, N_t)
+    v = phase1_pad(flat, N_t, cfg, opts)                              # ph 1
+    v_re, v_im = phase2_fft(v, cfg)                                   # ph 2
+    v_re, v_im = reorder_soti_to_tosi_block(
+        v_re, v_im, S, cfg.reorder_level("fft", "gemv"))
+    Y_re, Y_im = phase3_gemm(F_re, F_im, v_re, v_im, cfg, opts, adjoint)  # 3
+    Y_re, Y_im = reorder_tosi_to_soti_block(
+        Y_re, Y_im, cfg.reorder_level("gemv", "ifft"))
+    y = phase4_ifft(Y_re, Y_im, N_t, cfg)                             # ph 4
+    y = phase5_unpad(y, N_t, cfg, opts)                               # ph 5a
+    R_out = y.shape[0] // S
+    return y.reshape(S, R_out, N_t).transpose(1, 2, 0)
+
+
 # ---------------------------------------------------------------------------
 # Public operator
 # ---------------------------------------------------------------------------
@@ -139,9 +194,11 @@ class FFTMatvec:
 
     Single-device by default; pass ``mesh`` (+ axis names) for the 2-D
     processor-grid distributed version.  Input/output block vectors are in
-    SOTI layout: ``m`` (N_m, N_t), ``d`` (N_d, N_t).  I/O dtype follows the
-    paper: the working precision at entry/exit is the highest level in use
-    (f64 in paper mode, f32 TPU-native).
+    SOTI layout: ``m`` (N_m, N_t), ``d`` (N_d, N_t).  Multi-RHS blocks
+    (``matmat``/``rmatmat``) stack S vectors along a minor axis:
+    (R, N_t, S).  I/O dtype follows the paper: the working precision at
+    entry/exit is the highest level in use (f64 in paper mode, f32
+    TPU-native).
     """
 
     F_hat_re: jax.Array          # (K, N_d, N_m) TOSI, stored at gemv level
@@ -196,6 +253,16 @@ class FFTMatvec:
                           self.precision, self.opts, adjoint=True)
         return y.astype(self.io_dtype)
 
+    def _matmat_single(self, M):
+        Y = _local_matmat(self.F_hat_re, self.F_hat_im, M, self.N_t,
+                          self.precision, self.opts, adjoint=False)
+        return Y.astype(self.io_dtype)
+
+    def _rmatmat_single(self, D):
+        Y = _local_matmat(self.F_hat_re, self.F_hat_im, D, self.N_t,
+                          self.precision, self.opts, adjoint=True)
+        return Y.astype(self.io_dtype)
+
     # -- distributed paths ----------------------------------------------------
     def _matvec_sharded(self, m):
         row, col = self._row, self.col_axis
@@ -209,7 +276,7 @@ class FFTMatvec:
             part = part.astype(prec.real_dtype(cfg.reduce))
             return jax.lax.psum(part, col).astype(io_dtype)
 
-        return jax.shard_map(
+        return shard_map(
             body, mesh=self.mesh,
             in_specs=(P(None, row, col), P(None, row, col), P(col, None)),
             out_specs=P(row, None),
@@ -234,11 +301,47 @@ class FFTMatvec:
                 part = jax.lax.psum(part, row)
             return part.astype(io_dtype)
 
-        return jax.shard_map(
+        return shard_map(
             body, mesh=self.mesh,
             in_specs=(P(None, row, col), P(None, row, col), P(row, None)),
             out_specs=P(col, None),
         )(self.F_hat_re, self.F_hat_im, d)
+
+    def _matmat_sharded(self, M):
+        row, col = self._row, self.col_axis
+        cfg, opts, N_t, io_dtype = self.precision, self.opts, self.N_t, self.io_dtype
+
+        def body(F_re, F_im, M_loc):
+            part = _local_matmat(F_re, F_im, M_loc, N_t, cfg, opts,
+                                 adjoint=False)
+            part = part.astype(prec.real_dtype(cfg.reduce))
+            return jax.lax.psum(part, col).astype(io_dtype)
+
+        return shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(None, row, col), P(None, row, col),
+                      P(col, None, None)),
+            out_specs=P(row, None, None),
+        )(self.F_hat_re, self.F_hat_im, M)
+
+    def _rmatmat_sharded(self, D):
+        row, col = self._row, self.col_axis
+        cfg, opts, N_t, io_dtype = self.precision, self.opts, self.N_t, self.io_dtype
+
+        def body(F_re, F_im, D_loc):
+            part = _local_matmat(F_re, F_im, D_loc, N_t, cfg, opts,
+                                 adjoint=True)
+            part = part.astype(prec.real_dtype(cfg.reduce))
+            if row is not None:
+                part = jax.lax.psum(part, row)
+            return part.astype(io_dtype)
+
+        return shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(None, row, col), P(None, row, col),
+                      P(row, None, None)),
+            out_specs=P(col, None, None),
+        )(self.F_hat_re, self.F_hat_im, D)
 
     # -- public API ------------------------------------------------------------
     def matvec(self, m):
@@ -251,18 +354,45 @@ class FFTMatvec:
         fn = self._rmatvec_sharded if self.mesh is not None else self._rmatvec_single
         return fn(d)
 
+    def matmat(self, M):
+        """D = F M over S stacked right-hand sides.
+
+        M: (N_m, N_t, S) -> D: (N_d, N_t, S), RHS axis minor.  A 2-D input
+        is promoted to S = 1 and squeezed back, so ``matvec`` is exactly
+        the S = 1 special case of this method.
+        """
+        if M.ndim == 2:
+            return self.matmat(M[..., None])[..., 0]
+        fn = self._matmat_sharded if self.mesh is not None else self._matmat_single
+        return fn(M)
+
+    def rmatmat(self, D):
+        """M = F* D over S stacked right-hand sides.
+        D: (N_d, N_t, S) -> M: (N_m, N_t, S)."""
+        if D.ndim == 2:
+            return self.rmatmat(D[..., None])[..., 0]
+        fn = self._rmatmat_sharded if self.mesh is not None else self._rmatmat_single
+        return fn(D)
+
     def jitted(self):
         """Jit-compiled (matvec, rmatvec) pair."""
         return jax.jit(self.matvec), jax.jit(self.rmatvec)
 
-    # -- sharding helpers -------------------------------------------------------
-    def m_sharding(self):
-        assert self.mesh is not None
-        return NamedSharding(self.mesh, P(self.col_axis, None))
+    def jitted_block(self):
+        """Jit-compiled (matmat, rmatmat) pair."""
+        return jax.jit(self.matmat), jax.jit(self.rmatmat)
 
-    def d_sharding(self):
+    # -- sharding helpers -------------------------------------------------------
+    def m_sharding(self, stacked: bool = False):
         assert self.mesh is not None
-        return NamedSharding(self.mesh, P(self._row, None))
+        spec = (P(self.col_axis, None, None) if stacked
+                else P(self.col_axis, None))
+        return NamedSharding(self.mesh, spec)
+
+    def d_sharding(self, stacked: bool = False):
+        assert self.mesh is not None
+        spec = P(self._row, None, None) if stacked else P(self._row, None)
+        return NamedSharding(self.mesh, spec)
 
 
 # ---------------------------------------------------------------------------

@@ -56,6 +56,13 @@ class GaussianInverseProblem:
         out = op.matvec(self.prior_var * op.rmatvec(v)) + self.noise_var * v
         return out.reshape(-1)
 
+    def hessian_action_block(self, V: jax.Array) -> jax.Array:
+        """(F G_pr F^T + G_n) V on an (N_d, N_t[, S]) observation block —
+        the multi-RHS Hessian action (one SBGEMM-backed matmat pair per
+        application, shared across all S columns)."""
+        return (self.op.matmat(self.prior_var * self.op.rmatmat(V))
+                + self.noise_var * V)
+
     # -- MAP point ------------------------------------------------------------
     def map_point(self, d_obs: jax.Array, m_prior: jax.Array | None = None,
                   *, method: str = "cg", tol: float = 1e-10,
@@ -74,6 +81,46 @@ class GaussianInverseProblem:
                 self.hessian_action, resid, tol=tol, maxiter=maxiter)
         w = w.reshape(op.N_d, op.N_t)
         return m_prior + self.prior_var * op.rmatvec(w)
+
+    # -- Krylov-subsystem MAP solves (multi-RHS capable) ---------------------
+    def map_point_krylov(self, d_obs: jax.Array,
+                         m_prior: jax.Array | None = None, *,
+                         method: str = "lsqr", tol: float = 1e-10,
+                         maxiter: int = 500, solver_precision=None):
+        """MAP solve through :mod:`repro.solvers` (parameter-space form).
+
+        For G_n = noise_var I, G_pr = prior_var I the MAP update solves
+        Tikhonov least squares  min ||F dm - r||^2 + (noise/prior) ||dm||^2
+        with r = d_obs - F m_prior — LSQR on the factored problem
+        (``method="lsqr"``) or CGNR on the normal equations
+        (``method="cgnr"``).  ``d_obs`` may be a stacked (N_d, N_t, S)
+        block: all S observation sets are reconstructed sharing each
+        F / F* application.  Returns ``(m_map, SolveResult)``.
+        """
+        from repro import solvers  # deferred: solvers layers on top of core
+
+        op = self.op
+        if solver_precision is None:
+            solver_precision = solvers.SolverPrecision()
+        if m_prior is None:
+            resid = d_obs
+        else:
+            # a shared 2-D prior against a stacked d_obs broadcasts over S
+            if d_obs.ndim == 3 and m_prior.ndim == 2:
+                m_prior = m_prior[..., None]
+            resid = d_obs - op.matmat(m_prior)
+        lam = self.noise_var / self.prior_var
+        if method == "lsqr":
+            res = solvers.lsqr(op, resid, damp=float(lam) ** 0.5, tol=tol,
+                               maxiter=maxiter, precision=solver_precision)
+        elif method == "cgnr":
+            res = solvers.cg_normal_equations(op, resid, damp=lam, tol=tol,
+                                              maxiter=maxiter,
+                                              precision=solver_precision)
+        else:
+            raise ValueError(f"unknown Krylov method {method!r}")
+        m_map = res.x if m_prior is None else m_prior + res.x
+        return m_map, res
 
     # -- optimal experimental design ingredient ------------------------------
     def expected_information_gain(self) -> jax.Array:

@@ -1,0 +1,44 @@
+"""JAX version-compatibility layer (runtime APIs).
+
+The distributed code targets the modern spellings (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.set_mesh``); older releases
+ship the same functionality under ``jax.experimental.shard_map`` and the
+global-mesh context manager.  Everything below is a thin front so the rest
+of the codebase is written once.  The Pallas analogue lives in
+``repro.kernels._compat``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        # check_rep pre-dates reliable replication inference through FFTs
+        # and mixed-dtype casts; the collective structure here is explicit.
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    try:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.  On older
+    JAX the Mesh object itself is the (global resource-env) context."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

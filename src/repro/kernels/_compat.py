@@ -1,0 +1,24 @@
+"""Pallas API compatibility shim.
+
+The TPU compiler-params dataclass was renamed across JAX releases:
+``pltpu.TPUCompilerParams`` (<= 0.4.x / early 0.5.x) became
+``pltpu.CompilerParams`` (newer).  Every kernel in this package goes
+through :func:`compiler_params` so the rest of the code is written
+against a single spelling regardless of the installed JAX.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+else:  # pragma: no cover - exercised on older JAX only
+    CompilerParams = pltpu.TPUCompilerParams
+
+
+def compiler_params(*, dimension_semantics=None, **kw):
+    """Build TPU compiler params portably across JAX versions."""
+    if dimension_semantics is not None:
+        kw["dimension_semantics"] = tuple(dimension_semantics)
+    return CompilerParams(**kw)

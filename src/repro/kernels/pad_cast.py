@@ -14,7 +14,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import compiler_params
 
 
 def _pad_cast_kernel(T: int, x_ref, o_ref):
@@ -36,7 +37,7 @@ def pad_cast(x, pad_to: int, out_dtype, *, block_rows: int = 8,
         in_specs=[pl.BlockSpec((block_rows, T), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_rows, pad_to), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, pad_to), out_dtype),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=compiler_params(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x)
 
@@ -57,6 +58,6 @@ def unpad_cast(x, keep: int, out_dtype, *, block_rows: int = 8,
         in_specs=[pl.BlockSpec((block_rows, keep), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_rows, keep), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, keep), out_dtype),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=compiler_params(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x)

@@ -60,3 +60,44 @@ def unpad_cast_ref(x, keep: int, out_dtype):
     """Slice the first ``keep`` entries of the minor axis and cast.  Fused
     Phase-5 memory op."""
     return x[..., :keep].astype(out_dtype)
+
+
+def sbgemm_real_ref(A, X, mode: str = "N"):
+    """Strided-batched real GEMM (multi-RHS GEMV).
+
+    A: (B, m, n).  mode "N": X (B, n, S) -> Y (B, m, S);  mode "T":
+    X (B, m, S) -> Y (B, n, S).  f32 accumulation (f64 under x64).
+    """
+    acc = jnp.float64 if A.dtype == jnp.float64 else jnp.float32
+    if mode == "N":
+        Y = jnp.einsum("bmn,bns->bms", A.astype(acc), X.astype(acc))
+    elif mode == "T":
+        Y = jnp.einsum("bmn,bms->bns", A.astype(acc), X.astype(acc))
+    else:
+        raise ValueError(f"bad mode {mode!r}")
+    return Y.astype(A.dtype)
+
+
+def sbgemm_complex_ref(A_re, A_im, X_re, X_im, mode: str = "N"):
+    """Strided-batched complex GEMM on split re/im planes.
+
+    modes: "N" (Y = A X), "T" (Y = A^T X), "H" (Y = A^H X).  X carries the
+    RHS axis last: (B, n, S) for "N", (B, m, S) otherwise.  Returns
+    (Y_re, Y_im) in the input dtype.
+    """
+    acc = jnp.float64 if A_re.dtype == jnp.float64 else jnp.float32
+    Ar, Ai = A_re.astype(acc), A_im.astype(acc)
+    Xr, Xi = X_re.astype(acc), X_im.astype(acc)
+    if mode == "N":
+        e = lambda A, X: jnp.einsum("bmn,bns->bms", A, X)
+    elif mode in ("T", "H"):
+        e = lambda A, X: jnp.einsum("bmn,bms->bns", A, X)
+    else:
+        raise ValueError(f"bad mode {mode!r}")
+    if mode == "H":  # conj(A)^T X
+        Y_re = e(Ar, Xr) + e(Ai, Xi)
+        Y_im = e(Ar, Xi) - e(Ai, Xr)
+    else:
+        Y_re = e(Ar, Xr) - e(Ai, Xi)
+        Y_im = e(Ar, Xi) + e(Ai, Xr)
+    return Y_re.astype(A_re.dtype), Y_im.astype(A_re.dtype)

@@ -30,7 +30,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import compiler_params
 
 _ACC = jnp.float32
 
@@ -80,7 +81,7 @@ def sbgemv_th_complex(A_re, A_im, x_re, x_im, *, conj: bool,
         in_specs=[spec_A, spec_A, spec_x, spec_x],
         out_specs=[spec_y, spec_y],
         out_shape=[out, out],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(A_re, A_im, x_re, x_im)
@@ -133,7 +134,7 @@ def sbgemv_n_complex(A_re, A_im, x_re, x_im, *, block_n: int = 512,
         in_specs=[spec_A, spec_A, spec_x, spec_x],
         out_specs=[spec_y, spec_y],
         out_shape=[out, out],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(A_re, A_im, x_re, x_im)
@@ -160,7 +161,7 @@ def sbgemv_th_real(A, x, *, block_n: int = 512, interpret: bool = False):
                   pl.BlockSpec((1, m), lambda b, j: (b, 0))],
         out_specs=pl.BlockSpec((1, block_n), lambda b, j: (b, j)),
         out_shape=jax.ShapeDtypeStruct((B, n), _ACC),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(A, x)
@@ -190,7 +191,186 @@ def sbgemv_n_real(A, x, *, block_n: int = 512, interpret: bool = False):
                   pl.BlockSpec((1, block_n), lambda b, j: (b, j))],
         out_specs=pl.BlockSpec((1, m), lambda b, j: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((B, m), _ACC),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(A, x)
+
+
+# ===========================================================================
+# Multi-RHS (block) variants: SBGEMM.
+#
+# Batching S right-hand sides turns the bandwidth-bound SBGEMV into an
+# MXU-friendly SBGEMM: each (m x block_n) A tile is loaded from HBM once
+# and contracted against an S-column panel, so matrix traffic amortizes
+# over S outputs (arithmetic intensity grows ~linearly in S until the MXU
+# saturates).  Both the long n axis AND the RHS axis are tiled; grids mark
+# independent output tiles ``parallel`` and keep the contraction axis
+# innermost (``arbitrary``).  Accumulation stays f32.
+# ===========================================================================
+
+
+def _dg_t(a, b):
+    """Contract leading axes: (m, p) x (m, q) -> (p, q)."""
+    return jax.lax.dot_general(a, b, (((0,), (0,)), ((), ())),
+                               preferred_element_type=_ACC)
+
+
+# ---------------------------------------------------------------------------
+# Transpose / conjugate-transpose, complex: Y = A^T X or A^H X
+#   A planes: (B, m, n), X planes: (B, m, S)  ->  Y planes: (B, n, S) f32.
+# Grid (B, n_tiles, s_tiles): every step writes a distinct output tile.
+# ---------------------------------------------------------------------------
+
+def _sbgemm_th_complex_kernel(conj: bool, Ar_ref, Ai_ref, Xr_ref, Xi_ref,
+                              Yr_ref, Yi_ref):
+    Ar = Ar_ref[0]                      # (m, bn)
+    Ai = Ai_ref[0]
+    Xr = Xr_ref[0]                      # (m, bs)
+    Xi = Xi_ref[0]
+    rr = _dg_t(Ar, Xr)                  # (bn, bs)
+    ii = _dg_t(Ai, Xi)
+    ri = _dg_t(Ai, Xr)
+    ir = _dg_t(Ar, Xi)
+    if conj:   # Y = conj(A)^T X
+        Yr_ref[0] = rr + ii
+        Yi_ref[0] = ir - ri
+    else:      # Y = A^T X
+        Yr_ref[0] = rr - ii
+        Yi_ref[0] = ir + ri
+
+
+def sbgemm_th_complex(A_re, A_im, X_re, X_im, *, conj: bool,
+                      block_n: int = 512, block_s: int = 128,
+                      interpret: bool = False):
+    """(Conjugate-)transpose batched complex GEMM.  Shapes must be padded:
+    m % 8 == 0, n % block_n == 0, S % block_s == 0.  Returns (Y_re, Y_im)
+    f32 of shape (B, n, S)."""
+    B, m, n = A_re.shape
+    S = X_re.shape[2]
+    assert n % block_n == 0 and S % block_s == 0 and X_re.shape == (B, m, S)
+    grid = (B, n // block_n, S // block_s)
+    spec_A = pl.BlockSpec((1, m, block_n), lambda b, j, s: (b, 0, j))
+    spec_X = pl.BlockSpec((1, m, block_s), lambda b, j, s: (b, 0, s))
+    spec_Y = pl.BlockSpec((1, block_n, block_s), lambda b, j, s: (b, j, s))
+    out = jax.ShapeDtypeStruct((B, n, S), _ACC)
+    return pl.pallas_call(
+        functools.partial(_sbgemm_th_complex_kernel, conj),
+        grid=grid,
+        in_specs=[spec_A, spec_A, spec_X, spec_X],
+        out_specs=[spec_Y, spec_Y],
+        out_shape=[out, out],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(A_re, A_im, X_re, X_im)
+
+
+# ---------------------------------------------------------------------------
+# Non-transpose, complex: Y = A X
+#   A planes: (B, m, n), X planes: (B, n, S)  ->  Y planes: (B, m, S) f32.
+# Grid (B, s_tiles, n_tiles): column tiles accumulate into the same output
+# block, so the n axis is a reduction ("arbitrary") and is innermost.
+# ---------------------------------------------------------------------------
+
+def _sbgemm_n_complex_kernel(Ar_ref, Ai_ref, Xr_ref, Xi_ref, Yr_ref, Yi_ref):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        Yr_ref[...] = jnp.zeros_like(Yr_ref)
+        Yi_ref[...] = jnp.zeros_like(Yi_ref)
+
+    Ar = Ar_ref[0]                      # (m, bn)
+    Ai = Ai_ref[0]
+    Xr = Xr_ref[0]                      # (bn, bs)
+    Xi = Xi_ref[0]
+    rr = _dot(Ar, Xr)                   # (m, bs)
+    ii = _dot(Ai, Xi)
+    ri = _dot(Ai, Xr)
+    ir = _dot(Ar, Xi)
+    Yr_ref[0] += rr - ii
+    Yi_ref[0] += ir + ri
+
+
+def sbgemm_n_complex(A_re, A_im, X_re, X_im, *, block_n: int = 512,
+                     block_s: int = 128, interpret: bool = False):
+    """Non-transpose batched complex GEMM.  m % 8 == 0, n % block_n == 0,
+    S % block_s == 0.  Returns (Y_re, Y_im) f32 of shape (B, m, S)."""
+    B, m, n = A_re.shape
+    S = X_re.shape[2]
+    assert n % block_n == 0 and S % block_s == 0 and X_re.shape == (B, n, S)
+    grid = (B, S // block_s, n // block_n)
+    spec_A = pl.BlockSpec((1, m, block_n), lambda b, s, j: (b, 0, j))
+    spec_X = pl.BlockSpec((1, block_n, block_s), lambda b, s, j: (b, j, s))
+    spec_Y = pl.BlockSpec((1, m, block_s), lambda b, s, j: (b, 0, s))
+    out = jax.ShapeDtypeStruct((B, m, S), _ACC)
+    return pl.pallas_call(
+        _sbgemm_n_complex_kernel,
+        grid=grid,
+        in_specs=[spec_A, spec_A, spec_X, spec_X],
+        out_specs=[spec_Y, spec_Y],
+        out_shape=[out, out],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(A_re, A_im, X_re, X_im)
+
+
+# ---------------------------------------------------------------------------
+# Real variants
+# ---------------------------------------------------------------------------
+
+def _sbgemm_th_real_kernel(A_ref, X_ref, Y_ref):
+    Y_ref[0] = _dg_t(A_ref[0], X_ref[0])
+
+
+def sbgemm_th_real(A, X, *, block_n: int = 512, block_s: int = 128,
+                   interpret: bool = False):
+    """Y = A^T X, real.  A (B, m, n), X (B, m, S) -> Y (B, n, S) f32."""
+    B, m, n = A.shape
+    S = X.shape[2]
+    assert n % block_n == 0 and S % block_s == 0 and X.shape == (B, m, S)
+    grid = (B, n // block_n, S // block_s)
+    return pl.pallas_call(
+        _sbgemm_th_real_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, m, block_n), lambda b, j, s: (b, 0, j)),
+                  pl.BlockSpec((1, m, block_s), lambda b, j, s: (b, 0, s))],
+        out_specs=pl.BlockSpec((1, block_n, block_s),
+                               lambda b, j, s: (b, j, s)),
+        out_shape=jax.ShapeDtypeStruct((B, n, S), _ACC),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(A, X)
+
+
+def _sbgemm_n_real_kernel(A_ref, X_ref, Y_ref):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        Y_ref[...] = jnp.zeros_like(Y_ref)
+
+    Y_ref[0] += _dot(A_ref[0], X_ref[0])
+
+
+def sbgemm_n_real(A, X, *, block_n: int = 512, block_s: int = 128,
+                  interpret: bool = False):
+    """Y = A X, real.  A (B, m, n), X (B, n, S) -> Y (B, m, S) f32."""
+    B, m, n = A.shape
+    S = X.shape[2]
+    assert n % block_n == 0 and S % block_s == 0 and X.shape == (B, n, S)
+    grid = (B, S // block_s, n // block_n)
+    return pl.pallas_call(
+        _sbgemm_n_real_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, m, block_n), lambda b, s, j: (b, 0, j)),
+                  pl.BlockSpec((1, block_n, block_s), lambda b, s, j: (b, j, s))],
+        out_specs=pl.BlockSpec((1, m, block_s), lambda b, s, j: (b, 0, s)),
+        out_shape=jax.ShapeDtypeStruct((B, m, S), _ACC),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(A, X)

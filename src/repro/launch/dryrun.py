@@ -47,8 +47,10 @@ from repro.models import api
 from repro.models.sharding_ctx import DEFAULT_RULES, axis_rules
 from repro.optim import AdamW, constant_schedule
 from .mesh import dp_axes, fftmatvec_grid, make_production_mesh, mesh_shape_dict
-from .roofline import (hbm_floor_bytes, model_flops, parse_collectives,
-                       roofline_fraction, roofline_terms, useful_ratio)
+from repro.jax_compat import set_mesh
+from .roofline import (cost_analysis_dict, hbm_floor_bytes, model_flops,
+                       parse_collectives, roofline_fraction, roofline_terms,
+                       useful_ratio)
 
 
 # ---------------------------------------------------------------------------
@@ -65,7 +67,7 @@ def _lower_step(cfg, shape, mesh, *, fsdp="data", opt_state_dtype="float32"):
 
     Lowered inside ``jax.set_mesh`` + logical axis rules so the models'
     activation sharding constraints resolve (sharding_ctx.py)."""
-    with jax.set_mesh(mesh), axis_rules(DEFAULT_RULES, mesh_shape_dict(mesh)):
+    with set_mesh(mesh), axis_rules(DEFAULT_RULES, mesh_shape_dict(mesh)):
         return _lower_step_inner(cfg, shape, mesh, fsdp=fsdp,
                                  opt_state_dtype=opt_state_dtype)
 
@@ -122,9 +124,7 @@ def _lower_step_inner(cfg, shape, mesh, *, fsdp="data",
 
 def _cost_vector(compiled):
     """(flops, bytes, collective_bytes, counts, bytes_by_type) per device."""
-    cost = compiled.cost_analysis()
-    if isinstance(cost, (list, tuple)):
-        cost = cost[0]
+    cost = cost_analysis_dict(compiled)
     txt = compiled.as_text()
     coll = parse_collectives(txt)
     return {"flops": float(cost.get("flops", 0.0)),

@@ -10,13 +10,14 @@ from __future__ import annotations
 
 import jax
 
+from repro.jax_compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_shape_dict(mesh) -> dict:
@@ -30,8 +31,7 @@ def dp_axes(mesh):
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for multi-device CPU tests (device_count must allow it)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def fftmatvec_grid(mesh):

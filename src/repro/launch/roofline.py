@@ -37,6 +37,16 @@ _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions: older
+    releases return a single-element list of dicts, newer ones a plain
+    dict.  Every roofline consumer goes through this."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def _shape_bytes(type_str: str) -> int:
     """Bytes of an HLO type string, incl. tuples: 'f32[64,256]{1,0}'."""
     total = 0

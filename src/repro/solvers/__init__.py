@@ -1,0 +1,43 @@
+"""Mixed-precision Krylov solvers on top of the multi-RHS FFTMatvec.
+
+The paper's FFTMatvec exists to power Hessian actions inside large-scale
+Bayesian inverse problems (§1, §3.6); this package supplies the outer
+loop.  Both solvers run S stacked right-hand sides as independent chains
+sharing every operator application (``matmat``/``rmatmat``), and take a
+:class:`SolverPrecision` assigning a level to each iteration leg (apply /
+orthogonalize / recurrence) on top of the operator's own five-phase
+:class:`~repro.core.PrecisionConfig`.
+
+Public API:
+    SolverPrecision, DOUBLE, SINGLE, TPU_MIXED  — per-leg solver precision
+    SolveResult                                 — x + residual histories
+    pcg                                         — preconditioned CG (SPD)
+    cg_normal_equations                         — CGNR for min ||Fm - d||
+    lsqr                                        — damped LSQR (Golub-Kahan)
+    error_floor                                 — eq.-(6) residual floor
+"""
+
+from .precision import (SolverPrecision, DOUBLE, SINGLE,  # noqa: F401
+                        TPU_MIXED, col_dot, col_norm)
+from .result import SolveResult  # noqa: F401
+from .cg import pcg, cg_normal_equations  # noqa: F401
+from .lsqr import lsqr  # noqa: F401
+
+from repro.core.error_model import relative_error_bound as _bound
+
+
+def error_floor(op, *, p_r: int = 1, p_c: int = 1, kappa: float = 1.0,
+                safety: float = 10.0) -> float:
+    """Achievable relative-residual floor for Krylov iterations driven by
+    a mixed-precision FFTMatvec.
+
+    Every iteration applies F and F*, so the per-application first-order
+    bound of paper eq. (6) (``core.error_model``) caps how far the true
+    residual can be pushed: below ``safety * max(bound_F, bound_F*)`` the
+    recurrence only accumulates operator rounding noise.  Use
+    ``max(tol, error_floor(op))`` as the practical stopping target.
+    """
+    cfg = op.precision
+    bf = _bound(cfg, op.N_t, op.N_d, op.N_m, p_r=p_r, p_c=p_c)
+    ba = _bound(cfg, op.N_t, op.N_d, op.N_m, p_r=p_r, p_c=p_c, adjoint=True)
+    return safety * kappa * max(bf, ba)

@@ -1,0 +1,39 @@
+"""Solve result carrying per-iteration residual histories.
+
+Histories are recorded on the host at f64 so they can be compared
+directly against the first-order bound of :mod:`repro.core.error_model`
+(see :func:`repro.solvers.error_floor`): a mixed-precision operator puts
+a floor under the achievable relative residual, and iterating past it
+only accumulates rounding noise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class SolveResult:
+    """Outcome of a Krylov solve.
+
+    ``x`` keeps the RHS layout of the input ``b``: (..., S) for stacked
+    multi-RHS solves, no trailing axis for a single vector.
+    ``residual_history`` is (n_iters, S) — entry [k, s] is column s's
+    relative residual after iteration k (estimated for LSQR).
+    """
+
+    x: jax.Array
+    converged: bool
+    n_iters: int
+    residual_history: np.ndarray
+
+    @property
+    def final_relres(self) -> np.ndarray:
+        """Per-column relative residual at exit, shape (S,).  A solve that
+        never iterated (maxiter=0) has no columns to report: single NaN."""
+        if len(self.residual_history) == 0:
+            return np.full((1,), np.nan)
+        return self.residual_history[-1]

@@ -35,24 +35,32 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 from repro.core import (FFTMatvec, PrecisionConfig, dense_matvec,
                         dense_rmatvec, random_block_column, rel_l2)
-mesh = jax.make_mesh((2, 4), ("row", "col"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-Nt, Nd, Nm = 16, 6, 32
+from repro.jax_compat import make_mesh
+mesh = make_mesh((2, 4), ("row", "col"))
+Nt, Nd, Nm, S = 16, 6, 32, 3
 F_col = random_block_column(jax.random.PRNGKey(0), Nt, Nd, Nm, dtype=jnp.float64)
 m = jax.random.normal(jax.random.PRNGKey(1), (Nm, Nt), dtype=jnp.float64)
 d = jax.random.normal(jax.random.PRNGKey(2), (Nd, Nt), dtype=jnp.float64)
 op = FFTMatvec.from_block_column(F_col, mesh=mesh)
 e1 = rel_l2(op.matvec(jax.device_put(m, op.m_sharding())), dense_matvec(F_col, m))
 e2 = rel_l2(op.rmatvec(jax.device_put(d, op.d_sharding())), dense_rmatvec(F_col, d))
+# multi-RHS: sharded matmat/rmatmat vs stacked dense references
+M = jax.random.normal(jax.random.PRNGKey(3), (Nm, Nt, S), dtype=jnp.float64)
+D = jax.random.normal(jax.random.PRNGKey(4), (Nd, Nt, S), dtype=jnp.float64)
+e3 = rel_l2(op.matmat(jax.device_put(M, op.m_sharding(stacked=True))),
+            jnp.stack([dense_matvec(F_col, M[:, :, s]) for s in range(S)], axis=-1))
+e4 = rel_l2(op.rmatmat(jax.device_put(D, op.d_sharding(stacked=True))),
+            jnp.stack([dense_rmatvec(F_col, D[:, :, s]) for s in range(S)], axis=-1))
 # collective structure of the F matvec: ONLY the phase-5 reduce
 lo = jax.jit(op.matvec, in_shardings=op.m_sharding()).lower(
     jax.ShapeDtypeStruct(m.shape, m.dtype)).compile()
 import re
 colls = sorted(set(re.findall(
     r'(all-reduce|all-gather|reduce-scatter|all-to-all)', lo.as_text())))
-print(json.dumps({"e1": e1, "e2": e2, "colls": colls}))
+print(json.dumps({"e1": e1, "e2": e2, "e3": e3, "e4": e4, "colls": colls}))
 """)
     assert res["e1"] < 1e-13 and res["e2"] < 1e-13
+    assert res["e3"] < 1e-13 and res["e4"] < 1e-13
     assert res["colls"] == ["all-reduce"]
 
 
@@ -78,15 +86,15 @@ state1 = api.init_train_state(cfg, opt, key)
 s1, m1 = jax.jit(api.make_train_step(cfg, opt))(state1, batch)
 
 # 2x4 mesh
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.jax_compat import make_mesh, set_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 msd = {"data": 2, "model": 4}
 specs = api.train_state_specs(cfg, opt, msd, fsdp="data")
 ns = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                   is_leaf=lambda x: isinstance(x, P))
 state2 = api.init_train_state(cfg, opt, key)
 state2 = jax.tree.map(lambda x, sh: jax.device_put(x, sh), state2, ns)
-with jax.set_mesh(mesh), axis_rules(DEFAULT_RULES, msd):
+with set_mesh(mesh), axis_rules(DEFAULT_RULES, msd):
     step2 = jax.jit(api.make_train_step(cfg, opt),
                     in_shardings=(ns, None), out_shardings=(ns, None))
     s2, m2 = step2(state2, batch)
@@ -120,8 +128,8 @@ logits, state = api.prefill_step(cfg, params, batch, max_seq)
 tok = jnp.ones((B, 1), jnp.int32)
 ref_logits, _ = api.decode_step(cfg, params, state, tok)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.jax_compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 msd = {"data": 2, "model": 4}
 dspecs = api.decode_state_specs(cfg, B, max_seq, msd, dp="data")
 assert dspecs["k"][2] is not None, "seq axis must be sharded"

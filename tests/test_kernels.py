@@ -126,3 +126,77 @@ def test_dispatcher_f64_falls_back():
     xr = jnp.ones((B, m), jnp.float64)
     got = ops.sbgemv(Ar, Ar, xr, xr, "H", use_pallas=True, interpret=True)
     assert got[0].dtype == jnp.float64
+
+
+# ---------------------------------------------------------------------------
+# Multi-RHS (SBGEMM) kernels
+# ---------------------------------------------------------------------------
+
+GEMM_SHAPES = [(3, 4, 128, 4), (2, 100, 640, 1), (1, 8, 512, 16),
+               (2, 7, 130, 5)]   # last case: unaligned everywhere
+
+
+@pytest.mark.parametrize("B,m,n,S", GEMM_SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("mode", ["N", "T", "H"])
+def test_sbgemm_matches_oracle(B, m, n, S, dtype, mode):
+    ks = jax.random.split(jax.random.PRNGKey(10), 4)
+    mk = lambda k, shape: jax.random.normal(k, shape, jnp.float32).astype(dtype)
+    Ar, Ai = mk(ks[0], (B, m, n)), mk(ks[1], (B, m, n))
+    xd = n if mode == "N" else m
+    Xr, Xi = mk(ks[2], (B, xd, S)), mk(ks[3], (B, xd, S))
+    got = ops.sbgemm(Ar, Ai, Xr, Xi, mode, use_pallas=True, interpret=True,
+                     block_n=128, block_s=8, out_dtype=jnp.float32)
+    want = ref.sbgemm_complex_ref(Ar.astype(jnp.float32),
+                                  Ai.astype(jnp.float32),
+                                  Xr.astype(jnp.float32),
+                                  Xi.astype(jnp.float32), mode)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=_tol(dtype), atol=_tol(dtype) * n / 64)
+
+
+@pytest.mark.parametrize("mode", ["N", "T", "H"])
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_sbgemm_equals_columnwise_sbgemv(mode, use_pallas):
+    """The batched-RHS kernel must reproduce S independent GEMVs."""
+    B, m, n, S = 2, 12, 256, 3
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    mk = lambda k, shape: jax.random.normal(k, shape, jnp.float32)
+    Ar, Ai = mk(ks[0], (B, m, n)), mk(ks[1], (B, m, n))
+    xd = n if mode == "N" else m
+    Xr, Xi = mk(ks[2], (B, xd, S)), mk(ks[3], (B, xd, S))
+    Yr, Yi = ops.sbgemm(Ar, Ai, Xr, Xi, mode, use_pallas=use_pallas,
+                        interpret=True, block_n=128, block_s=8)
+    for s in range(S):
+        yr, yi = ops.sbgemv(Ar, Ai, Xr[:, :, s], Xi[:, :, s], mode,
+                            use_pallas=use_pallas, interpret=True,
+                            block_n=128)
+        np.testing.assert_allclose(np.asarray(Yr[:, :, s]), np.asarray(yr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(Yi[:, :, s]), np.asarray(yi),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["N", "T"])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sbgemm_real(mode, dtype):
+    B, m, n, S = 3, 24, 384, 6
+    k1, k2 = jax.random.split(jax.random.PRNGKey(12))
+    A = jax.random.normal(k1, (B, m, n), jnp.float32).astype(dtype)
+    X = jax.random.normal(k2, (B, m if mode == "T" else n, S),
+                          jnp.float32).astype(dtype)
+    got = ops.sbgemm_real(A, X, mode, use_pallas=True, interpret=True,
+                          block_n=128, block_s=8, out_dtype=jnp.float32)
+    want = ref.sbgemm_real_ref(A.astype(jnp.float32), X.astype(jnp.float32),
+                               mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=_tol(dtype), atol=_tol(dtype) * 8)
+
+
+def test_sbgemm_f64_falls_back():
+    B, m, n, S = 2, 4, 64, 3
+    A = jnp.ones((B, m, n), jnp.float64)
+    X = jnp.ones((B, m, S), jnp.float64)
+    got = ops.sbgemm(A, A, X, X, "H", use_pallas=True, interpret=True)
+    assert got[0].dtype == jnp.float64 and got[0].shape == (B, n, S)

@@ -1,9 +1,17 @@
-"""Hypothesis property-based tests on system invariants."""
+"""Hypothesis property-based tests on system invariants.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt); the
+module skips cleanly when it is not installed so the tier-1 suite stays
+collectable on minimal environments.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (FFTMatvec, PrecisionConfig, dense_matvec,
                         random_block_column, rel_l2)

@@ -6,9 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.roofline import (_shape_bytes, hbm_floor_bytes,
-                                   model_flops, parse_collectives,
-                                   roofline_terms)
+from repro.launch.roofline import (_shape_bytes, cost_analysis_dict,
+                                   hbm_floor_bytes, model_flops,
+                                   parse_collectives, roofline_terms)
 
 
 def test_shape_bytes():
@@ -105,7 +105,7 @@ def test_layer_extrapolation_matches_full_unroll():
                  "labels": jax.ShapeDtypeStruct((2, 32), jnp.int32)}
         fn = lambda p, b: api.loss_fn(cfg, p, b)[0]
         co = jax.jit(fn).lower(params, batch).compile()
-        return co.cost_analysis()["flops"]
+        return cost_analysis_dict(co)["flops"]
 
     c1 = flops_of(cfg0.replace(n_layers=1))
     c2 = flops_of(cfg0.replace(n_layers=2))

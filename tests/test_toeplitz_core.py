@@ -93,3 +93,72 @@ def test_io_dtype_follows_highest_level():
         op = FFTMatvec.from_block_column(
             F_col, precision=PrecisionConfig.from_string(s))
         assert op.matvec(m).dtype == dt, s
+
+
+# ---------------------------------------------------------------------------
+# Multi-RHS operator paths (matmat / rmatmat)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Nt,Nd,Nm,S", [(8, 3, 5, 1), (16, 2, 8, 4),
+                                        (13, 5, 7, 3)])
+def test_matmat_matches_stacked_matvec(Nt, Nd, Nm, S):
+    F_col = random_block_column(jax.random.PRNGKey(20), Nt, Nd, Nm,
+                                dtype=jnp.float64)
+    op = FFTMatvec.from_block_column(F_col)
+    M = jax.random.normal(jax.random.PRNGKey(21), (Nm, Nt, S), jnp.float64)
+    want = jnp.stack([op.matvec(M[:, :, s]) for s in range(S)], axis=-1)
+    assert rel_l2(op.matmat(M), want) < 1e-13
+    D = jax.random.normal(jax.random.PRNGKey(22), (Nd, Nt, S), jnp.float64)
+    want_r = jnp.stack([op.rmatvec(D[:, :, s]) for s in range(S)], axis=-1)
+    assert rel_l2(op.rmatmat(D), want_r) < 1e-13
+
+
+def test_matmat_2d_input_is_matvec():
+    """matvec is exactly the S = 1 special case of matmat."""
+    F_col = random_block_column(jax.random.PRNGKey(23), 12, 3, 6,
+                                dtype=jnp.float64)
+    op = FFTMatvec.from_block_column(F_col)
+    m = jax.random.normal(jax.random.PRNGKey(24), (6, 12), jnp.float64)
+    out = op.matmat(m)
+    assert out.shape == (3, 12)
+    assert rel_l2(out, op.matvec(m)) < 1e-14
+
+
+def test_matmat_adjoint_property_per_column():
+    Nt, Nd, Nm, S = 12, 4, 9, 3
+    F_col = random_block_column(jax.random.PRNGKey(25), Nt, Nd, Nm,
+                                dtype=jnp.float64)
+    op = FFTMatvec.from_block_column(F_col)
+    M = jax.random.normal(jax.random.PRNGKey(26), (Nm, Nt, S), jnp.float64)
+    D = jax.random.normal(jax.random.PRNGKey(27), (Nd, Nt, S), jnp.float64)
+    FM, FtD = op.matmat(M), op.rmatmat(D)
+    for s in range(S):
+        lhs = jnp.vdot(FM[:, :, s], D[:, :, s])
+        rhs = jnp.vdot(M[:, :, s], FtD[:, :, s])
+        assert abs(lhs - rhs) / abs(lhs) < 1e-13
+
+
+def test_matmat_pallas_path_matches_xla():
+    Nt, Nd, Nm, S = 16, 4, 64, 5
+    F_col = random_block_column(jax.random.PRNGKey(28), Nt, Nd, Nm)
+    M = jax.random.normal(jax.random.PRNGKey(29), (Nm, Nt, S), jnp.float32)
+    D = jax.random.normal(jax.random.PRNGKey(30), (Nd, Nt, S), jnp.float32)
+    prec = PrecisionConfig.from_string("sssss")
+    base = FFTMatvec.from_block_column(F_col, precision=prec)
+    pal = FFTMatvec.from_block_column(
+        F_col, precision=prec,
+        opts=MatvecOptions(use_pallas=True, interpret=True,
+                           fuse_pad_cast=True, block_n=128, block_s=8))
+    assert rel_l2(pal.matmat(M), base.matmat(M)) < 1e-5
+    assert rel_l2(pal.rmatmat(D), base.rmatmat(D)) < 1e-5
+
+
+def test_matmat_io_dtype_follows_highest_level():
+    F_col = random_block_column(jax.random.PRNGKey(31), 8, 2, 4,
+                                dtype=jnp.float64)
+    M = jnp.ones((4, 8, 2), jnp.float64)
+    for s, dt in [("ddddd", jnp.float64), ("sssss", jnp.float32),
+                  ("hhhhh", jnp.bfloat16)]:
+        op = FFTMatvec.from_block_column(
+            F_col, precision=PrecisionConfig.from_string(s))
+        assert op.matmat(M).dtype == dt, s
