@@ -9,6 +9,7 @@ Public API:
 """
 
 from .precision import (PrecisionConfig, all_configs, machine_eps,  # noqa: F401
+                        config_le, config_lt, level_index, max_level,
                         DOUBLE, SINGLE, TPU_BASELINE, TPU_FAST,
                         PAPER_OPT_F, PAPER_OPT_FSTAR, PAPER_OPT_F_LARGE,
                         TPU_OPT_F)
@@ -18,7 +19,8 @@ from .toeplitz import (dense_from_block_column, dense_matvec,  # noqa: F401
                        random_block_column, random_unrepresentable,
                        heat_equation_p2o)
 from .partition import choose_grid, paper_grid, matvec_comm_time, NetworkModel  # noqa: F401
-from .error_model import relative_error_bound, dominant_phase  # noqa: F401
+from .error_model import (relative_error_bound, dominant_phase,  # noqa: F401
+                          lattice_bounds, phase_factors)
 from .pareto import (ConfigRecord, measure_configs, pareto_front,  # noqa: F401
-                     optimal_config, format_table, rel_l2)
+                     optimal_config, format_table, rel_l2, time_callable)
 from .hessian import GaussianInverseProblem  # noqa: F401

@@ -11,13 +11,49 @@ for the F matvec, with n_m = ceil(N_m / p_c); the F* bound replaces n_m by
 n_d = ceil(N_d / p_r) and p_c by p_r.  e_i is the unit roundoff of the
 precision used in phase i; c_i are O(1) algorithm constants; c1 = 0 when
 Phase 1 runs at (or above) the precision that represents the input exactly.
+
+One deliberate extension over the paper's formula: the reduce term uses
+1 + log2(p_c) rather than log2(p_c), because the Phase-5 unpad stores at
+the reduce precision even on a single device (see ``phase_factors``).
 """
 
 from __future__ import annotations
 
 import math
+from typing import Iterable
 
 from .precision import PrecisionConfig, machine_eps
+
+
+def phase_factors(N_t: int, N_d: int, N_m: int, p_r: int = 1, p_c: int = 1,
+                  *, adjoint: bool = False) -> dict[str, float]:
+    """Structural multiplier of each phase's unit roundoff in eq. (6).
+
+    The bound is ``kappa * (setup + sum_p c_p * e_p * factor_p)`` with the
+    pad term active only for inputs that are lossy at the pad level.
+    Exposed so :mod:`repro.tune` can calibrate the O(1) constants ``c_p``
+    from probe measurements: ``c_p ~= measured_err_p / (e_p * factor_p)``.
+
+    The reduce factor is ``1 + log2(p)``, not the paper's bare
+    ``log2(p)``: the Phase-5 unpad+cast stores at the reduce level even
+    on a single device (one rounding, measurably nonzero — mirroring how
+    the pad term covers the Phase-1 cast), on top of the depth-``log2(p)``
+    reduction tree.
+    """
+    if adjoint:
+        n_local = math.ceil(N_d / max(p_r, 1))
+        p_red = max(p_r, 1)
+    else:
+        n_local = math.ceil(N_m / max(p_c, 1))
+        p_red = max(p_c, 1)
+    log_nt = math.log2(max(N_t, 2))
+    return {
+        "pad": 1.0,
+        "fft": log_nt,
+        "gemv": float(n_local),
+        "ifft": log_nt,
+        "reduce": 1.0 + (math.log2(p_red) if p_red > 1 else 0.0),
+    }
 
 
 def relative_error_bound(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
@@ -39,37 +75,30 @@ def relative_error_bound(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
     lossless = machine_eps(cfg.pad) <= machine_eps(input_level)
     c1 = 0.0 if lossless else c["c1"]
 
-    if adjoint:
-        n_local = math.ceil(N_d / max(p_r, 1))
-        p_red = max(p_r, 1)
-    else:
-        n_local = math.ceil(N_m / max(p_c, 1))
-        p_red = max(p_c, 1)
+    f = phase_factors(N_t, N_d, N_m, p_r, p_c, adjoint=adjoint)
 
-    log_nt = math.log2(max(N_t, 2))
-    log_p = math.log2(p_red) if p_red > 1 else 0.0
+    return kappa * (c1 * e["pad"] * f["pad"]
+                    + c["cF"] * e_setup * f["fft"]
+                    + c["c2"] * e["fft"] * f["fft"]
+                    + c["c4"] * e["ifft"] * f["ifft"]
+                    + c["c3"] * e["gemv"] * f["gemv"]
+                    + c["c5"] * e["reduce"] * f["reduce"])
 
-    return kappa * (c1 * e["pad"]
-                    + (c["cF"] * e_setup + c["c2"] * e["fft"]
-                       + c["c4"] * e["ifft"]) * log_nt
-                    + c["c3"] * e["gemv"] * n_local
-                    + c["c5"] * e["reduce"] * log_p)
+
+def lattice_bounds(configs: Iterable[PrecisionConfig], N_t: int, N_d: int,
+                   N_m: int, **kw) -> dict[str, float]:
+    """Evaluate eq. (6) over a config lattice: ``{cfg_string: bound}``.
+
+    Analytic only — no operator runs; this is what makes model-guided
+    pruning (``repro.tune.pruner``) free relative to measurement."""
+    return {cfg.to_string(): relative_error_bound(cfg, N_t, N_d, N_m, **kw)
+            for cfg in configs}
 
 
 def dominant_phase(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
                    p_r: int = 1, p_c: int = 1, *, adjoint: bool = False) -> str:
     """Which phase contributes the largest term of eq. (6).  The paper:
     'the dominant error term comes from the SBGEMV in Phase 3'."""
-    e = {p: machine_eps(getattr(cfg, p)) for p in
-         ("pad", "fft", "gemv", "ifft", "reduce")}
-    n_local = (math.ceil(N_d / max(p_r, 1)) if adjoint
-               else math.ceil(N_m / max(p_c, 1)))
-    p_red = max(p_r if adjoint else p_c, 1)
-    terms = {
-        "pad": e["pad"],
-        "fft": e["fft"] * math.log2(max(N_t, 2)),
-        "gemv": e["gemv"] * n_local,
-        "ifft": e["ifft"] * math.log2(max(N_t, 2)),
-        "reduce": e["reduce"] * (math.log2(p_red) if p_red > 1 else 0.0),
-    }
+    f = phase_factors(N_t, N_d, N_m, p_r, p_c, adjoint=adjoint)
+    terms = {p: machine_eps(getattr(cfg, p)) * f[p] for p in f}
     return max(terms, key=terms.get)

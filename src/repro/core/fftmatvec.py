@@ -229,6 +229,33 @@ class FFTMatvec:
                 F_hat_im=jax.device_put(F_im, NamedSharding(mesh, spec)))
         return op
 
+    def with_precision(self, precision: PrecisionConfig) -> "FFTMatvec":
+        """Same operator retuned to another per-phase config.
+
+        The stored Fourier blocks are recast to the new gemv level.  Casts
+        preserve sharding; note an *upcast* cannot restore bits lost when
+        the operator was originally stored low — retune from the
+        highest-precision operator (``autotune`` does)."""
+        dt = prec.real_dtype(precision.gemv)
+        return dataclasses.replace(self, precision=precision,
+                                   F_hat_re=self.F_hat_re.astype(dt),
+                                   F_hat_im=self.F_hat_im.astype(dt))
+
+    def autotune(self, tol: float, *, full_result: bool = False, **kw):
+        """Dynamic mixed-precision selection (paper §3.2 at runtime).
+
+        Picks the fastest per-phase config whose measured error stays
+        within ``tol`` — pruning the lattice with the calibrated eq.-(6)
+        model so only a small frontier is timed — and returns the
+        operator retuned to it.  ``full_result=True`` returns the
+        :class:`repro.tune.TuneResult` instead (records, Pareto front,
+        bounds, measurement counts).  Keywords are forwarded to
+        :func:`repro.tune.autotune` (``ladder``, ``variant``, ``cache``/
+        ``cache_path``, ``repeats``, ``mode``, ...)."""
+        from repro.tune import autotune as _autotune   # deferred: tune builds on core
+        res = _autotune(self, tol=tol, **kw)
+        return res if full_result else res.op
+
     # -- shapes --------------------------------------------------------------
     @property
     def N_d(self) -> int:

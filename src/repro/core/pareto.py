@@ -11,15 +11,13 @@ sensor noise level, paper §3.2).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Iterable, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .fftmatvec import FFTMatvec, MatvecOptions
+from .fftmatvec import FFTMatvec
 from .precision import PrecisionConfig, all_configs
+from .timing import TimingHarness, time_callable
 
 
 @dataclasses.dataclass
@@ -34,14 +32,7 @@ class ConfigRecord:
         return self.config.to_string()
 
 
-def _time_callable(fn: Callable, arg, repeats: int, warmup: int = 2) -> float:
-    for _ in range(warmup):
-        jax.block_until_ready(fn(arg))
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        out = fn(arg)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / repeats
+_time_callable = time_callable   # back-compat alias
 
 
 def rel_l2(x, ref) -> float:
@@ -54,23 +45,34 @@ def rel_l2(x, ref) -> float:
 def measure_configs(op_builder: Callable[[PrecisionConfig], FFTMatvec],
                     v, configs: Iterable[PrecisionConfig] | None = None,
                     *, adjoint: bool = False, baseline: str | None = None,
-                    repeats: int = 5) -> list[ConfigRecord]:
+                    repeats: int = 5, warmup: int = 2,
+                    mode: str = "throughput", variant: str | None = None,
+                    harness=None) -> list[ConfigRecord]:
     """Run every configuration, recording error vs the baseline config's
     output and mean runtime over ``repeats`` (paper: 100 reps; tests use
-    fewer).  ``op_builder(cfg)`` must return a ready operator."""
+    fewer).  ``op_builder(cfg)`` must return a ready operator.
+
+    ``variant`` selects the operator method ("matvec", "rmatvec",
+    "matmat", "rmatmat"; default follows ``adjoint``).  Timing goes
+    through a :class:`repro.core.timing.TimingHarness` — one jitted
+    callable shared across the whole sweep, so re-measuring a config (or
+    the baseline) never re-traces; pass ``harness`` to share its jit
+    cache across multiple sweeps.  An explicit ``harness`` carries its
+    OWN repeats/warmup/mode — those arguments here apply only to the
+    default-constructed one."""
     configs = list(configs) if configs is not None else list(all_configs())
     if baseline is None:
         # highest level across configs ("h" < "s" < "d" — NOT lexicographic)
         order = ("h", "s", "d")
         baseline = max((c.highest() for c in configs), key=order.index)
     base_cfg = PrecisionConfig(*([baseline] * 5))
+    if variant is None:
+        variant = "rmatvec" if adjoint else "matvec"
+    if harness is None:
+        harness = TimingHarness(repeats=repeats, warmup=warmup, mode=mode)
 
     def run(cfg: PrecisionConfig):
-        op = op_builder(cfg)
-        fn = jax.jit(op.rmatvec if adjoint else op.matvec)
-        out = jax.block_until_ready(fn(v))
-        t = _time_callable(fn, v, repeats)
-        return out, t
+        return harness.time(op_builder(cfg), v, variant)
 
     ref_out, base_t = run(base_cfg)
     records = []
@@ -84,7 +86,12 @@ def measure_configs(op_builder: Callable[[PrecisionConfig], FFTMatvec],
 
 
 def pareto_front(records: Sequence[ConfigRecord]) -> list[ConfigRecord]:
-    """Non-dominated set: no other record is both faster and more accurate."""
+    """Non-dominated set: no other record is both faster and more accurate.
+
+    Domination is strict in at least one axis, so exact (time, error)
+    duplicates never eliminate each other: a set of identical points is
+    returned whole, and a single record is its own front.  The front of a
+    non-empty input is never empty."""
     front = []
     for r in records:
         dominated = any(

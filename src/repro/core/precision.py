@@ -58,6 +58,16 @@ def min_level(a: str, b: str) -> str:
     return a if _LEVELS.index(a) <= _LEVELS.index(b) else b
 
 
+def level_index(level: str) -> int:
+    """Position on the h < s < d ladder (0, 1, 2)."""
+    return _LEVELS.index(level)
+
+
+def max_level(levels: Sequence[str]) -> str:
+    """Highest of a set of precision levels."""
+    return max(levels, key=_LEVELS.index)
+
+
 @dataclasses.dataclass(frozen=True)
 class PrecisionConfig:
     """Precision level of each of the five FFTMatvec phases.
@@ -105,6 +115,25 @@ class PrecisionConfig:
 
     def replace(self, **kw) -> "PrecisionConfig":
         return dataclasses.replace(self, **kw)
+
+    def cost_rank(self) -> int:
+        """Sum of per-phase ladder indices — a model-level cost proxy that
+        is strictly monotone under raising any phase's precision."""
+        return sum(_LEVELS.index(getattr(self, p)) for p in PHASES)
+
+
+def config_le(a: PrecisionConfig, b: PrecisionConfig) -> bool:
+    """Lattice partial order: ``a <= b`` iff every phase of ``a`` runs at a
+    level no higher than ``b``'s.  Under the eq.-(6) error model ``a`` is
+    then no more accurate than ``b``, and under any cost model that is
+    monotone in per-phase precision ``a`` is no more expensive."""
+    return all(_LEVELS.index(getattr(a, p)) <= _LEVELS.index(getattr(b, p))
+               for p in PHASES)
+
+
+def config_lt(a: PrecisionConfig, b: PrecisionConfig) -> bool:
+    """Strict lattice order: ``a <= b`` and ``a != b``."""
+    return a != b and config_le(a, b)
 
 
 def all_configs(levels: Sequence[str] = ("d", "s")) -> Iterator[PrecisionConfig]:

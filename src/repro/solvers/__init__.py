@@ -18,7 +18,7 @@ Public API:
 """
 
 from .precision import (SolverPrecision, DOUBLE, SINGLE,  # noqa: F401
-                        TPU_MIXED, col_dot, col_norm)
+                        TPU_MIXED, col_dot, col_norm, resolve_precision)
 from .result import SolveResult  # noqa: F401
 from .cg import pcg, cg_normal_equations  # noqa: F401
 from .lsqr import lsqr  # noqa: F401

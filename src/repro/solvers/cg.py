@@ -23,7 +23,8 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from .precision import SolverPrecision, col_dot, col_norm
+from .precision import (SolverPrecision, col_dot, col_norm,
+                        resolve_precision)
 from .result import SolveResult
 
 _SAFE = lambda x: jnp.where(x == 0, 1, x)
@@ -31,7 +32,7 @@ _SAFE = lambda x: jnp.where(x == 0, 1, x)
 
 def pcg(A: Callable, b, *, x0=None, tol: float = 1e-10, maxiter: int = 500,
         M: Optional[Callable] = None, multi_rhs: bool | None = None,
-        precision: SolverPrecision = SolverPrecision()) -> SolveResult:
+        precision: SolverPrecision | str = SolverPrecision()) -> SolveResult:
     """Preconditioned CG for SPD ``A``, S stacked right-hand sides.
 
     ``b``'s minor axis is the RHS stack when ``multi_rhs`` is true
@@ -44,8 +45,11 @@ def pcg(A: Callable, b, *, x0=None, tol: float = 1e-10, maxiter: int = 500,
 
     Per ``precision``: operator inputs are carried at the apply level,
     steering dots run at the orthogonalize level (accumulated high), and
-    x/r/p updates at the recurrence level.
+    x/r/p updates at the recurrence level.  ``precision`` also accepts a
+    3-char string ("sds") or ``"auto"`` (per-leg levels derived from
+    ``tol`` via :meth:`SolverPrecision.from_tolerance`).
     """
+    precision = resolve_precision(precision, tol)
     if multi_rhs is None:
         multi_rhs = b.ndim >= 3
     squeeze = not multi_rhs
@@ -98,12 +102,14 @@ def pcg(A: Callable, b, *, x0=None, tol: float = 1e-10, maxiter: int = 500,
 
 def cg_normal_equations(op, d_obs, *, damp: float = 0.0, tol: float = 1e-10,
                         maxiter: int = 500, M: Optional[Callable] = None,
-                        precision: SolverPrecision = SolverPrecision()
+                        precision: SolverPrecision | str = SolverPrecision()
                         ) -> SolveResult:
     """CGNR: solve min ||F m - d||^2 + damp ||m||^2 via
     (F* F + damp I) m = F* d, with F an :class:`FFTMatvec`-like operator
     exposing ``matmat``/``rmatmat`` ((R, N_t, S) stacked SOTI layout, 2-D
-    inputs treated as S = 1)."""
+    inputs treated as S = 1).  ``precision`` accepts the same string
+    forms as :func:`pcg` (incl. ``"auto"``)."""
+    precision = resolve_precision(precision, tol)
     rec_dt = precision.recurrence_dtype()
 
     def normal_op(v):

@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from .precision import SolverPrecision, col_norm
+from .precision import SolverPrecision, col_norm, resolve_precision
 from .result import SolveResult
 
 _SAFE = lambda x: jnp.where(x == 0, 1, x)
@@ -26,14 +26,16 @@ _SAFE = lambda x: jnp.where(x == 0, 1, x)
 
 def lsqr(op, d_obs, *, damp: float = 0.0, tol: float = 1e-10,
          maxiter: int = 500,
-         precision: SolverPrecision = SolverPrecision()) -> SolveResult:
+         precision: SolverPrecision | str = SolverPrecision()) -> SolveResult:
     """Damped LSQR for ``op`` exposing ``matmat``/``rmatmat``.
 
     ``d_obs``: (N_d, N_t) SOTI or (N_d, N_t, S) stacked.  Returns m with
     the matching layout.  The residual history records LSQR's running
     estimate ||r_k|| / ||d|| per column (phibar recurrence), which tracks
-    the true residual of the damped system.
+    the true residual of the damped system.  ``precision`` accepts a
+    3-char string or ``"auto"`` (derived from ``tol``), like :func:`pcg`.
     """
+    precision = resolve_precision(precision, tol)
     squeeze = d_obs.ndim == 2
     b = d_obs[..., None] if squeeze else d_obs
     rec_dt = precision.recurrence_dtype()

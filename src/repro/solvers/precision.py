@@ -68,6 +68,58 @@ class SolverPrecision:
     def replace(self, **kw) -> "SolverPrecision":
         return dataclasses.replace(self, **kw)
 
+    @classmethod
+    def from_tolerance(cls, tol: float, *, ladder=("h", "s", "d"),
+                       apply_slack: float = 100.0, ortho_margin: float = 10.0,
+                       op=None) -> "SolverPrecision":
+        """Per-leg precisions for a target relative residual ``tol``.
+
+        Each leg gets the *lowest* ladder level whose unit roundoff meets
+        its sensitivity (mixed-precision Krylov practice, survey
+        arXiv:2412.19322): the steering scalars (orthogonalize) must
+        resolve below the tolerance (``eps <= tol / ortho_margin``), the
+        recurrence must carry vectors at the tolerance (``eps <= tol``),
+        and the operator-traffic leg tolerates much coarser storage
+        (``eps <= tol * apply_slack`` — its rounding enters once per
+        application, not cumulatively).  No qualifying level -> the
+        ladder's highest.  Examples: tol=1e-4 -> "hss" (== TPU_MIXED),
+        tol=1e-10 -> "ddd".
+
+        Pass ``op`` (an FFTMatvec) to floor the target at the operator's
+        own eq.-(6) error floor — legs are never provisioned finer than
+        the residual the operator can actually deliver."""
+        if tol <= 0.0:
+            raise ValueError(f"tolerance must be positive, got {tol}")
+        if op is not None:
+            from . import error_floor   # deferred: package-level helper
+            tol = max(tol, error_floor(op))
+        ordered = sorted(ladder, key=_prec.level_index)
+
+        def lowest(target: float) -> str:
+            for lvl in ordered:
+                if _prec.machine_eps(lvl) <= target:
+                    return lvl
+            return ordered[-1]
+
+        return cls(apply=lowest(tol * apply_slack),
+                   orthogonalize=lowest(tol / ortho_margin),
+                   recurrence=lowest(tol))
+
+
+def resolve_precision(precision, tol: float) -> SolverPrecision:
+    """Normalize a solver ``precision`` argument: a SolverPrecision passes
+    through, ``"auto"`` derives per-leg levels from the solve tolerance
+    (:meth:`SolverPrecision.from_tolerance`), any other string is a
+    3-char config like ``"sds"``."""
+    if isinstance(precision, SolverPrecision):
+        return precision
+    if isinstance(precision, str):
+        if precision == "auto":
+            return SolverPrecision.from_tolerance(tol)
+        return SolverPrecision.from_string(precision)
+    raise TypeError(f"precision must be SolverPrecision or str, "
+                    f"got {type(precision).__name__}")
+
 
 DOUBLE = SolverPrecision.from_string("ddd")
 SINGLE = SolverPrecision.from_string("sss")

@@ -1,0 +1,24 @@
+"""repro.tune — dynamic mixed-precision selection as a runtime service.
+
+The paper's Fig.-3 analysis (pick the fastest per-phase precision config
+meeting an error tolerance) as something an application calls at runtime,
+not an offline sweep:
+
+    op_tuned = op.autotune(tol=1e-7)                       # operator API
+    res = autotune(op, tol=1e-7, cache_path="tune.json")   # full result
+
+Pieces (each usable standalone):
+    pruner    — eq.-(6) bounds over the config lattice, probe-calibrated
+                constants, feasibility + precision-dominance pruning
+    harness   — TimingHarness: one jitted applier shared across configs,
+                throughput/latency modes, measurement accounting
+    cache     — TuningCache: JSON persistence keyed by (shape, ladder,
+                variant, device kind); corrupt/stale entries re-tune
+    autotune  — the orchestrator; TuneResult carries records/front/bounds
+"""
+
+from .autotune import TuneResult, autotune, default_input  # noqa: F401
+from .cache import CacheKey, TuningCache, default_cache_path  # noqa: F401
+from .harness import TimingHarness  # noqa: F401
+from .pruner import (PruneReport, calibrate_constants,  # noqa: F401
+                     minimal_elements, probe_configs, prune_lattice)

@@ -1,0 +1,10 @@
+"""Timing harness — re-export.
+
+The implementation lives in :mod:`repro.core.timing` so the layering
+stays one-directional (``core.pareto.measure_configs`` uses the harness
+too, and core must not depend on tune).  The tuner's public API surfaces
+it here as ``repro.tune.TimingHarness``.
+"""
+
+from repro.core.timing import (TimedEntry, TimingHarness,  # noqa: F401
+                               VARIANTS, time_callable)

@@ -1,0 +1,143 @@
+"""Error-model-guided pruning of the precision-config lattice.
+
+The exhaustive Fig.-3 protocol times every config in the 2^5 (or 3^5)
+lattice.  Eq. (6) (``core.error_model``) makes most of that measurement
+unnecessary: evaluated analytically over the whole lattice it certifies
+
+  * **infeasible** configs — model error above the tolerance (granting a
+    slack factor for model looseness); they can never be selected, and
+  * **dominated** configs — a model-feasible config ``a`` with every
+    phase at a level <= ``b``'s is no more expensive than ``b`` under any
+    precision-monotone cost model, so ``b`` can never be the *fastest*
+    feasible config; only the minimal elements (the *frontier*, an
+    antichain of the lattice order) ever need timing.
+
+The raw eq.-(6) constants are worst-case O(1) placeholders; the bound can
+sit orders of magnitude above measured error (the gemv term accumulates
+linearly in n_m where real rounding cancels like sqrt).  So the pruner
+supports *calibration*: fit the constants ``c1..c5`` from a handful of
+single-phase probe measurements (one phase lowered at a time from the
+baseline), then evaluate the same eq. (6) with the fitted constants.
+This is what :func:`repro.tune.autotune` uses — ~p*(L-1) probe runs buy a
+model accurate enough to prune the lattice to a handful of candidates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+from repro.core.error_model import lattice_bounds, phase_factors
+from repro.core.precision import (PHASES, PrecisionConfig, config_lt,
+                                  level_index, machine_eps, max_level)
+
+# Constant name of each phase in eq. (6), in PHASES order.
+PHASE_CONSTANTS = dict(zip(PHASES, ("c1", "c2", "c3", "c4", "c5")))
+
+
+def probe_configs(ladder: Sequence[str]) -> list[tuple[str, str, PrecisionConfig]]:
+    """Single-phase calibration probes: the all-highest baseline with
+    exactly one phase lowered to each sub-baseline level.  Returns
+    ``(phase, level, config)`` triples — p*(L-1) of them."""
+    top = max_level(ladder)
+    out = []
+    for phase in PHASES:
+        for lvl in ladder:
+            if level_index(lvl) < level_index(top):
+                out.append((phase, lvl,
+                            PrecisionConfig(*([top] * 5)).replace(**{phase: lvl})))
+    return out
+
+
+def calibrate_constants(probe_errors: Mapping[str, Mapping[str, float]],
+                        N_t: int, N_d: int, N_m: int, *, p_r: int = 1,
+                        p_c: int = 1, adjoint: bool = False,
+                        defaults: Mapping[str, float] | None = None
+                        ) -> dict[str, float]:
+    """Fit the eq.-(6) constants from single-phase probe errors.
+
+    ``probe_errors[phase][level]`` is the measured relative error of the
+    baseline config with only ``phase`` lowered to ``level``.  Since that
+    config's bound reduces to ``c_p * e_level * factor_p`` (the baseline
+    terms are negligible), ``c_p = err / (e_level * factor_p)``; with
+    several probe levels per phase the max ratio is kept.  A fitted
+    constant can still over-estimate a composite config's error (single-
+    phase superposition ignores cancellation), which would over-prune —
+    the autotuner compensates with a slack factor on the cutoff and a
+    measured-error recheck of every surviving candidate.  Phases with no
+    usable probe (missing from ``probe_errors``, or a zero structural
+    factor) keep their default constant."""
+    c = {"c1": 1.0, "c2": 1.0, "c3": 1.0, "c4": 1.0, "c5": 1.0, "cF": 1.0}
+    if defaults:
+        c.update(defaults)
+    f = phase_factors(N_t, N_d, N_m, p_r, p_c, adjoint=adjoint)
+    for phase, name in PHASE_CONSTANTS.items():
+        ratios = []
+        for lvl, err in probe_errors.get(phase, {}).items():
+            denom = machine_eps(lvl) * f[phase]
+            if denom > 0.0:
+                ratios.append(float(err) / denom)
+        if ratios:
+            c[name] = max(ratios)
+    return c
+
+
+@dataclasses.dataclass
+class PruneReport:
+    """Outcome of a model-level lattice prune."""
+    tol: float
+    cutoff: float                              # slack * tol
+    bounds: dict[str, float]                   # cfg string -> model bound
+    model_feasible: list[PrecisionConfig]      # bound <= cutoff
+    infeasible: list[PrecisionConfig]          # bound >  cutoff
+    frontier: list[PrecisionConfig]            # minimal feasible elements
+    dominated: list[PrecisionConfig]           # feasible but never fastest
+
+    @property
+    def n_lattice(self) -> int:
+        return len(self.model_feasible) + len(self.infeasible)
+
+
+def prune_lattice(configs: Iterable[PrecisionConfig], tol: float, N_t: int,
+                  N_d: int, N_m: int, *, p_r: int = 1, p_c: int = 1,
+                  adjoint: bool = False, kappa: float = 1.0,
+                  input_level: str = "d",
+                  constants: Mapping[str, float] | None = None,
+                  slack: float = 1.0) -> PruneReport:
+    """Prune a config lattice with eq. (6) alone (no measurements).
+
+    A config survives to the *frontier* iff its bound is within
+    ``slack * tol`` and no strictly-cheaper (lattice-order) config is also
+    within the cutoff.  The all-highest config is always kept feasible —
+    it is the measurement baseline and the fallback selection."""
+    if tol <= 0.0:
+        raise ValueError(f"tolerance must be positive, got {tol}")
+    configs = list(configs)
+    if not configs:
+        raise ValueError("empty config lattice")
+    bounds = lattice_bounds(configs, N_t, N_d, N_m, p_r=p_r, p_c=p_c,
+                            adjoint=adjoint, kappa=kappa,
+                            input_level=input_level,
+                            constants=dict(constants) if constants else None)
+    cutoff = slack * tol
+    best = min(configs, key=lambda cfg: (bounds[cfg.to_string()],
+                                         -cfg.cost_rank()))
+    feasible = [cfg for cfg in configs
+                if bounds[cfg.to_string()] <= cutoff or cfg == best]
+    infeasible = [cfg for cfg in configs if cfg not in feasible]
+    frontier, dominated = [], []
+    for cfg in feasible:
+        if any(config_lt(other, cfg) for other in feasible):
+            dominated.append(cfg)
+        else:
+            frontier.append(cfg)
+    return PruneReport(tol=tol, cutoff=cutoff, bounds=bounds,
+                       model_feasible=feasible, infeasible=infeasible,
+                       frontier=frontier, dominated=dominated)
+
+
+def minimal_elements(configs: Sequence[PrecisionConfig]) -> list[PrecisionConfig]:
+    """Minimal elements of a config set under the precision lattice order
+    (the antichain no member of which is precision-dominated)."""
+    return [cfg for cfg in configs
+            if not any(config_lt(other, cfg) for other in configs)]

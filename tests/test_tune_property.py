@@ -1,0 +1,159 @@
+"""Hypothesis property tests for the eq.-(6) error model and the
+tuner's pruning/caching machinery.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt); the
+module skips cleanly when absent.  CI runs it in the dedicated
+``property`` job, which installs the dev extras and fails if hypothesis
+is missing — no silent skip there.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import optimal_config  # noqa: E402
+from repro.core.error_model import relative_error_bound  # noqa: E402
+from repro.core.pareto import ConfigRecord  # noqa: E402
+from repro.core.precision import (PHASES, PrecisionConfig,  # noqa: E402
+                                  all_configs, config_le, config_lt,
+                                  level_index, max_level)
+from repro.tune import CacheKey, TuningCache, prune_lattice  # noqa: E402
+
+LADDERS = [("d", "s"), ("s", "h"), ("d", "s", "h")]
+
+configs3 = st.sampled_from([c for c in all_configs(("d", "s", "h"))])
+shapes = st.tuples(st.integers(1, 4096), st.integers(1, 512),
+                   st.integers(1, 4096))
+grids = st.tuples(st.integers(1, 64), st.integers(1, 64))
+
+
+# ---------------------------------------------------------------------------
+# Error-model properties (satellite: the bound is a usable pruning signal)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(configs3, shapes, grids, st.booleans())
+def test_lowering_any_phase_never_decreases_bound(cfg, shape, grid, adjoint):
+    Nt, Nd, Nm = shape
+    p_r, p_c = grid
+    b = relative_error_bound(cfg, Nt, Nd, Nm, p_r=p_r, p_c=p_c,
+                             adjoint=adjoint)
+    for phase in PHASES:
+        lvl = getattr(cfg, phase)
+        if lvl == "h":
+            continue
+        down = {"d": "s", "s": "h"}[lvl]
+        b_down = relative_error_bound(cfg.replace(**{phase: down}), Nt, Nd,
+                                      Nm, p_r=p_r, p_c=p_c, adjoint=adjoint)
+        assert b_down >= b
+
+
+@settings(max_examples=40, deadline=None)
+@given(configs3, shapes, st.integers(1, 1 << 20))
+def test_bound_monotone_in_Nt(cfg, shape, Nt2):
+    Nt, Nd, Nm = shape
+    lo, hi = sorted((Nt, Nt2))
+    assert relative_error_bound(cfg, lo, Nd, Nm) \
+        <= relative_error_bound(cfg, hi, Nd, Nm)
+
+
+@settings(max_examples=40, deadline=None)
+@given(configs3, shapes,
+       st.floats(1e-3, 1e12, allow_nan=False, allow_infinity=False),
+       st.floats(1.0, 1e6, allow_nan=False, allow_infinity=False))
+def test_bound_monotone_in_kappa(cfg, shape, kappa, factor):
+    Nt, Nd, Nm = shape
+    assert relative_error_bound(cfg, Nt, Nd, Nm, kappa=kappa) \
+        <= relative_error_bound(cfg, Nt, Nd, Nm, kappa=kappa * factor)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(LADDERS), shapes, st.booleans())
+def test_all_highest_config_minimizes_bound_over_lattice(ladder, shape,
+                                                         adjoint):
+    Nt, Nd, Nm = shape
+    top = PrecisionConfig(*([max_level(ladder)] * 5))
+    b_top = relative_error_bound(top, Nt, Nd, Nm, adjoint=adjoint)
+    for cfg in all_configs(ladder):
+        assert b_top <= relative_error_bound(cfg, Nt, Nd, Nm,
+                                             adjoint=adjoint)
+
+
+# ---------------------------------------------------------------------------
+# Lattice-order and pruner properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(configs3, configs3, configs3)
+def test_config_order_is_a_partial_order(a, b, c):
+    assert config_le(a, a)
+    if config_le(a, b) and config_le(b, a):
+        assert a == b
+    if config_le(a, b) and config_le(b, c):
+        assert config_le(a, c)
+    # the order refines the error model: a <= b => bound(a) >= bound(b)
+    if config_le(a, b):
+        assert relative_error_bound(a, 64, 8, 32) \
+            >= relative_error_bound(b, 64, 8, 32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(LADDERS),
+       st.floats(1e-16, 1e-1, allow_nan=False, allow_infinity=False),
+       shapes, st.floats(1.0, 64.0))
+def test_prune_lattice_invariants(ladder, tol, shape, slack):
+    Nt, Nd, Nm = shape
+    lattice = list(all_configs(ladder))
+    rep = prune_lattice(lattice, tol, Nt, Nd, Nm, slack=slack)
+    # partition of the lattice
+    assert len(rep.model_feasible) + len(rep.infeasible) == len(lattice)
+    assert set(rep.frontier) | set(rep.dominated) == set(rep.model_feasible)
+    assert rep.model_feasible                      # never empty (fallback)
+    # the frontier is an antichain...
+    for a in rep.frontier:
+        for b in rep.frontier:
+            assert not config_lt(a, b)
+    # ...that covers every feasible config from below
+    for cfg in rep.model_feasible:
+        assert any(config_le(f, cfg) for f in rep.frontier)
+
+
+# ---------------------------------------------------------------------------
+# Cache round-trip property: JSON persistence never changes the selection
+# ---------------------------------------------------------------------------
+
+record_lists = st.lists(
+    st.tuples(st.sampled_from([c for c in all_configs(("d", "s"))]),
+              st.floats(1e-12, 1.0, allow_nan=False, allow_infinity=False),
+              st.floats(1e-6, 10.0, allow_nan=False, allow_infinity=False)),
+    min_size=1, max_size=12,
+    unique_by=lambda t: t[0].to_string())
+
+
+@settings(max_examples=25, deadline=None)
+@given(record_lists,
+       st.floats(1e-12, 1.0, allow_nan=False, allow_infinity=False))
+def test_cache_roundtrip_preserves_selection(tmp_path_factory, entries, tol):
+    path = tmp_path_factory.mktemp("tune") / "cache.json"
+    baseline_cfg = PrecisionConfig.from_string("ddddd")
+    records = [ConfigRecord(baseline_cfg, 0.0, 1.0, 1.0)]
+    # de-tie the times so min-time selection is unambiguous either side
+    # of the round trip (hypothesis happily repeats float values)
+    records += [ConfigRecord(cfg, err, t * (1.0 + 1e-9 * (i + 1)), 1.0 / t)
+                for i, (cfg, err, t) in enumerate(entries)
+                if cfg != baseline_cfg]
+    key = CacheKey(8, 2, 4, ("d", "s"))
+
+    cache = TuningCache(path)
+    cache.put(key, records=records, front=[], chosen=records[0].config,
+              tol=tol, baseline=baseline_cfg, n_lattice=32)
+    cache.save()
+
+    reloaded = TuningCache(path)
+    got = reloaded.lookup_config(key, tol)
+    assert got == optimal_config(records, tol).config
+    back = {r.prec: r for r in reloaded.records(key)}
+    for r in records:
+        assert back[r.prec].rel_error == pytest.approx(r.rel_error)
+        assert back[r.prec].time_s == pytest.approx(r.time_s)
