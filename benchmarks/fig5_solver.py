@@ -15,6 +15,8 @@ baseline.  CPU-feasible sizes; the TPU numbers come from the dry-run
 roofline as usual.
 """
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 
@@ -24,34 +26,43 @@ from .common import row, time_fn
 
 N_T, N_D, N_M = 64, 8, 256
 RHS_SWEEP = (1, 2, 4, 8, 16)
+SMOKE = dict(N_T=16, N_D=3, N_M=24, RHS_SWEEP=(1, 4), S=4, it=5)
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CPU shapes for the CI smoke job")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        n_t, n_d, n_m, sweep = (SMOKE["N_T"], SMOKE["N_D"], SMOKE["N_M"],
+                                SMOKE["RHS_SWEEP"])
+    else:
+        n_t, n_d, n_m, sweep = N_T, N_D, N_M, RHS_SWEEP
     key = jax.random.PRNGKey(0)
-    F_col = random_block_column(key, N_T, N_D, N_M, dtype=jnp.float32)
+    F_col = random_block_column(key, n_t, n_d, n_m, dtype=jnp.float32)
     op = FFTMatvec.from_block_column(
         F_col, precision=PrecisionConfig.from_string("sssss"),
         opts=MatvecOptions(use_pallas=False))
     matvec, _ = op.jitted()
     matmat, _ = op.jitted_block()
 
-    m1 = jax.random.normal(jax.random.PRNGKey(1), (N_M, N_T), jnp.float32)
+    m1 = jax.random.normal(jax.random.PRNGKey(1), (n_m, n_t), jnp.float32)
     t1 = time_fn(matvec, m1, repeats=5)
     row("fig5/matvec_S1", t1, "per_rhs_us=%.1f" % (t1 * 1e6))
 
-    for S in RHS_SWEEP:
-        M = jax.random.normal(jax.random.PRNGKey(2), (N_M, N_T, S),
+    for S in sweep:
+        M = jax.random.normal(jax.random.PRNGKey(2), (n_m, n_t, S),
                               jnp.float32)
         t = time_fn(matmat, M, repeats=5)
         row(f"fig5/matmat_S{S}", t,
             f"per_rhs_us={t / S * 1e6:.1f};speedup_vs_stacked={S * t1 / t:.2f}")
 
     # solver leg: one shared-matmat LSQR solve for S observation blocks
-    S = 8
-    M_true = jax.random.normal(jax.random.PRNGKey(3), (N_M, N_T, S),
+    S, it = (SMOKE["S"], SMOKE["it"]) if args.smoke else (8, 25)
+    M_true = jax.random.normal(jax.random.PRNGKey(3), (n_m, n_t, S),
                                jnp.float32)
     D = matmat(M_true)
-    it = 25
 
     def solve_batched():
         return solvers.lsqr(op, D, tol=0.0, maxiter=it).x

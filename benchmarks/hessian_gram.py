@@ -1,0 +1,104 @@
+"""Hessian-action bench: composed rmatvec/matvec pairs vs the fused Gram.
+
+The paper's outer loop (Remark 1) is O(1e5) Hessian actions ``F G_pr F* v``.
+This bench measures what the stage-graph fusion buys per action:
+
+  - ``composed``       matvec(rmatvec(v)) — two full pipelines with an
+                       unpad -> cast -> pad round trip between them;
+  - ``fused_exact``    ``op.gram(space="data").apply`` — one pipeline, the
+                       truncation fused as a mask stage (identical result);
+  - ``fused_circulant``the per-bin G_hat pipeline — half the FFT/reorder
+                       stages (periodic-Gram semantics: preconditioner /
+                       screening proxy, hence reported separately);
+
+each at S = 1 and on an S-wide block (the SBGEMM path), plus a chunked
+``assemble_data_space_hessian`` leg.  Emits the usual CSV rows and a
+``BENCH_hessian.json`` artifact so CI records the perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.hessian_gram [--smoke] [--out PATH]
+"""
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (FFTMatvec, GaussianInverseProblem, MatvecOptions,
+                        PrecisionConfig, random_block_column, rel_l2)
+from .common import row, time_fn
+
+FULL = dict(N_t=128, N_d=16, N_m=625, S=8, repeats=5)
+SMOKE = dict(N_t=16, N_d=3, N_m=24, S=4, repeats=2)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CPU shapes for the CI smoke job")
+    ap.add_argument("--out", default="BENCH_hessian.json",
+                    help="JSON artifact path")
+    args = ap.parse_args(argv)
+    p = SMOKE if args.smoke else FULL
+    N_t, N_d, N_m, S, repeats = (p["N_t"], p["N_d"], p["N_m"], p["S"],
+                                 p["repeats"])
+
+    key = jax.random.PRNGKey(0)
+    F_col = random_block_column(key, N_t, N_d, N_m, dtype=jnp.float32)
+    op = FFTMatvec.from_block_column(
+        F_col, precision=PrecisionConfig.from_string("sssss"),
+        opts=MatvecOptions(use_pallas=False))
+    gram = op.gram(space="data", mode="exact")
+    gram_circ = op.gram(space="data", mode="circulant")
+
+    composed = jax.jit(lambda x: op.matvec(op.rmatvec(x)))
+    fused = gram.jitted()
+    circ = gram_circ.jitted()
+
+    results = {"shape": {"N_t": N_t, "N_d": N_d, "N_m": N_m, "S": S},
+               "smoke": bool(args.smoke), "rows": {}}
+
+    def leg(name, fn, x, baseline=None, err=None):
+        t = time_fn(fn, x, repeats=repeats)
+        derived = []
+        if baseline is not None:
+            derived.append(f"speedup_vs_composed={baseline / t:.2f}")
+        if err is not None:
+            derived.append(f"rel_err={err:.2e}")
+        row(f"hessian/{name}", t, ";".join(derived))
+        entry = {"time_s": t,
+                 "speedup_vs_composed": (baseline / t) if baseline else 1.0}
+        if err is not None:
+            entry["rel_err"] = float(err)
+        results["rows"][name] = entry
+        return t
+
+    v = jax.random.normal(jax.random.PRNGKey(1), (N_d, N_t), jnp.float32)
+    ref = composed(v)
+    t0 = leg("composed_S1", composed, v)
+    leg("fused_exact_S1", fused, v, baseline=t0, err=rel_l2(fused(v), ref))
+    leg("fused_circulant_S1", circ, v, baseline=t0)
+
+    V = jax.random.normal(jax.random.PRNGKey(2), (N_d, N_t, S), jnp.float32)
+    composed_blk = jax.jit(lambda x: op.matmat(op.rmatmat(x)))
+    err_blk = rel_l2(fused(V), composed_blk(V))
+    t0b = leg(f"composed_S{S}", composed_blk, V)
+    leg(f"fused_exact_S{S}", fused, V, baseline=t0b, err=err_blk)
+    leg(f"fused_circulant_S{S}", circ, V, baseline=t0b)
+
+    # chunked dense-Hessian assembly (the OED inner loop at demo scale)
+    prob = GaussianInverseProblem(op, noise_var=1e-4)
+    chunk = max(1, min(32, N_d * N_t))
+    t_asm = time_fn(lambda: prob.assemble_data_space_hessian(chunk=chunk),
+                    repeats=1, warmup=1)
+    row("hessian/assemble_chunked", t_asm,
+        f"chunk={chunk};dim={N_d * N_t}")
+    results["rows"]["assemble_chunked"] = {"time_s": t_asm, "chunk": chunk}
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

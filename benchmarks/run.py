@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV.  Figures map to the paper:
   fig3  mixed-precision Pareto front, 32 configs, tol 1e-7      (Fig. 3)
   fig4  weak scaling w/ comm-aware partitioning + mixed prec    (Fig. 4)
   fig5  multi-RHS matmat + shared-matmat Krylov solver throughput (ext.)
+  hessian  composed-vs-fused Gram Hessian actions (Remark 1 outer loop)
 TPU-target roofline numbers live in benchmarks/roofline_report (reads the
 dry-run artifacts; EXPERIMENTS.md §Roofline).
 """
@@ -20,12 +21,13 @@ jax.config.update("jax_enable_x64", True)   # paper-faithful f64 ladder
 def main() -> None:
     print("name,us_per_call,derived")
     from . import (fig1_sbgemv, fig2_phase_breakdown, fig3_pareto,
-                   fig4_scaling, fig5_solver)
+                   fig4_scaling, fig5_solver, hessian_gram)
     fig1_sbgemv.main()
     fig2_phase_breakdown.main()
     fig3_pareto.main()
     fig4_scaling.main()
-    fig5_solver.main()
+    fig5_solver.main([])
+    hessian_gram.main([])
 
 
 if __name__ == "__main__":

@@ -2,6 +2,8 @@
 
 Public API:
     PrecisionConfig, MatvecOptions, FFTMatvec  — mixed-precision matvec (C1+C3)
+    pipeline.Stage / matvec_plan / gram_plan   — stage graph + shared executor
+    GramOperator (FFTMatvec.gram)              — fused Fourier-domain Gram
     choose_grid / paper_grid                   — comm-aware 2-D partitioning
     pareto.measure_configs / pareto_front      — Pareto analysis (Fig. 3)
     error_model.relative_error_bound           — paper eq. (6)
@@ -13,7 +15,10 @@ from .precision import (PrecisionConfig, all_configs, machine_eps,  # noqa: F401
                         DOUBLE, SINGLE, TPU_BASELINE, TPU_FAST,
                         PAPER_OPT_F, PAPER_OPT_FSTAR, PAPER_OPT_F_LARGE,
                         TPU_OPT_F)
+from .pipeline import (Stage, matvec_plan, gram_plan, run_plan,  # noqa: F401
+                       stage_counts, record_stages)
 from .fftmatvec import FFTMatvec, MatvecOptions, phase_callables  # noqa: F401
+from .gram import GramOperator  # noqa: F401
 from .toeplitz import (dense_from_block_column, dense_matvec,  # noqa: F401
                        dense_rmatvec, fourier_block_column,
                        random_block_column, random_unrepresentable,

@@ -26,7 +26,8 @@ from .precision import PrecisionConfig, machine_eps
 
 
 def phase_factors(N_t: int, N_d: int, N_m: int, p_r: int = 1, p_c: int = 1,
-                  *, adjoint: bool = False) -> dict[str, float]:
+                  *, adjoint: bool = False,
+                  variant: str | None = None) -> dict[str, float]:
     """Structural multiplier of each phase's unit roundoff in eq. (6).
 
     The bound is ``kappa * (setup + sum_p c_p * e_p * factor_p)`` with the
@@ -34,19 +35,40 @@ def phase_factors(N_t: int, N_d: int, N_m: int, p_r: int = 1, p_c: int = 1,
     Exposed so :mod:`repro.tune` can calibrate the O(1) constants ``c_p``
     from probe measurements: ``c_p ~= measured_err_p / (e_p * factor_p)``.
 
+    ``variant`` selects the pipeline shape: the matvec/matmat family
+    (default; ``adjoint`` flips to the F* factors) or ``"gram"`` — the
+    fused Gram pipeline, whose phases each run twice (eq. (6) applied to
+    the chained F then F* passes: the fft/ifft terms double, the gemv
+    term accumulates both contraction lengths, and the reduction happens
+    over both grid axes).
+
     The reduce factor is ``1 + log2(p)``, not the paper's bare
     ``log2(p)``: the Phase-5 unpad+cast stores at the reduce level even
     on a single device (one rounding, measurably nonzero — mirroring how
     the pad term covers the Phase-1 cast), on top of the depth-``log2(p)``
     reduction tree.
     """
-    if adjoint:
-        n_local = math.ceil(N_d / max(p_r, 1))
-        p_red = max(p_r, 1)
-    else:
-        n_local = math.ceil(N_m / max(p_c, 1))
-        p_red = max(p_c, 1)
     log_nt = math.log2(max(N_t, 2))
+    n_m = math.ceil(N_m / max(p_c, 1))
+    n_d = math.ceil(N_d / max(p_r, 1))
+    if variant in ("gram", "gram_data"):
+        p_red = max(p_r, 1) * max(p_c, 1)
+        return {
+            "pad": 1.0,
+            "fft": 2.0 * log_nt,
+            "gemv": float(n_m + n_d),
+            "ifft": 2.0 * log_nt,
+            "reduce": 1.0 + (math.log2(p_red) if p_red > 1 else 0.0),
+        }
+    if variant is not None and variant not in ("matvec", "rmatvec",
+                                               "matmat", "rmatmat"):
+        raise ValueError(f"unknown variant {variant!r}")
+    if variant is not None:
+        adjoint = variant in ("rmatvec", "rmatmat")
+    if adjoint:
+        n_local, p_red = n_d, max(p_r, 1)
+    else:
+        n_local, p_red = n_m, max(p_c, 1)
     return {
         "pad": 1.0,
         "fft": log_nt,
@@ -59,10 +81,14 @@ def phase_factors(N_t: int, N_d: int, N_m: int, p_r: int = 1, p_c: int = 1,
 def relative_error_bound(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
                          p_r: int = 1, p_c: int = 1, *, adjoint: bool = False,
                          kappa: float = 1.0, input_level: str = "d",
-                         constants: dict | None = None) -> float:
+                         constants: dict | None = None,
+                         variant: str | None = None) -> float:
     """Evaluate eq. (6).  ``input_level`` is the precision at which the
     input vector is exactly representable (paper: double).  ``constants``
-    may override the O(1) factors c1..c5 and cF (default 1.0)."""
+    may override the O(1) factors c1..c5 and cF (default 1.0).
+    ``variant="gram"`` bounds the fused Gram pipeline: doubled structural
+    factors (see :func:`phase_factors`) and a squared condition number —
+    the chained F/F* passes each amplify by kappa(F_hat)."""
     c = {"c1": 1.0, "c2": 1.0, "c3": 1.0, "c4": 1.0, "c5": 1.0, "cF": 1.0}
     if constants:
         c.update(constants)
@@ -75,14 +101,16 @@ def relative_error_bound(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
     lossless = machine_eps(cfg.pad) <= machine_eps(input_level)
     c1 = 0.0 if lossless else c["c1"]
 
-    f = phase_factors(N_t, N_d, N_m, p_r, p_c, adjoint=adjoint)
+    f = phase_factors(N_t, N_d, N_m, p_r, p_c, adjoint=adjoint,
+                      variant=variant)
+    amp = kappa ** 2 if variant in ("gram", "gram_data") else kappa
 
-    return kappa * (c1 * e["pad"] * f["pad"]
-                    + c["cF"] * e_setup * f["fft"]
-                    + c["c2"] * e["fft"] * f["fft"]
-                    + c["c4"] * e["ifft"] * f["ifft"]
-                    + c["c3"] * e["gemv"] * f["gemv"]
-                    + c["c5"] * e["reduce"] * f["reduce"])
+    return amp * (c1 * e["pad"] * f["pad"]
+                  + c["cF"] * e_setup * f["fft"]
+                  + c["c2"] * e["fft"] * f["fft"]
+                  + c["c4"] * e["ifft"] * f["ifft"]
+                  + c["c3"] * e["gemv"] * f["gemv"]
+                  + c["c5"] * e["reduce"] * f["reduce"])
 
 
 def lattice_bounds(configs: Iterable[PrecisionConfig], N_t: int, N_d: int,
@@ -96,9 +124,11 @@ def lattice_bounds(configs: Iterable[PrecisionConfig], N_t: int, N_d: int,
 
 
 def dominant_phase(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
-                   p_r: int = 1, p_c: int = 1, *, adjoint: bool = False) -> str:
+                   p_r: int = 1, p_c: int = 1, *, adjoint: bool = False,
+                   variant: str | None = None) -> str:
     """Which phase contributes the largest term of eq. (6).  The paper:
     'the dominant error term comes from the SBGEMV in Phase 3'."""
-    f = phase_factors(N_t, N_d, N_m, p_r, p_c, adjoint=adjoint)
+    f = phase_factors(N_t, N_d, N_m, p_r, p_c, adjoint=adjoint,
+                      variant=variant)
     terms = {p: machine_eps(getattr(cfg, p)) * f[p] for p in f}
     return max(terms, key=terms.get)

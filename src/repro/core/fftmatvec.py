@@ -13,8 +13,12 @@ memory ops executed at the *lower* of the adjacent phases' precisions
 (paper footnote 8).  The adjoint ``m = F* d`` runs the same phases with a
 conjugate-transpose SBGEMV and broadcast/reduce roles swapped.
 
-Every phase's precision comes from a :class:`PrecisionConfig`; casts are
-fused with the pad/unpad memory ops (``kernels.ops.pad_cast``).
+Every variant of the pipeline — forward/adjoint, one or S stacked
+right-hand sides, local or 2-D-mesh sharded, plain or Gram-fused — is
+*compiled* to a :mod:`repro.core.pipeline` plan and executed by the shared
+stage-graph executor; this module holds the public operator that builds
+those plans.  Every phase's precision comes from a :class:`PrecisionConfig`;
+casts are fused with the pad/unpad memory ops (``kernels.ops.pad_cast``).
 
 Distribution (paper §2.4, §3.7): a 2-D ``(row, col)`` device grid; rows
 shard N_d, cols shard N_m.  ``m`` lives sharded over cols / replicated
@@ -27,16 +31,15 @@ not yet replicated) and a ``psum`` over rows.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.jax_compat import shard_map
-from repro.kernels import ops as kops
+from . import pipeline
 from . import precision as prec
+from .pipeline import reorder_planes  # noqa: F401  (public reorder stage)
 from .precision import PrecisionConfig
 from .toeplitz import fourier_block_column
 
@@ -52,98 +55,7 @@ class MatvecOptions:
 
 
 # ---------------------------------------------------------------------------
-# The five phases (single device / per-shard local compute).
-# All take SOTI/TOSI layouts as documented in toeplitz.py.
-# ---------------------------------------------------------------------------
-
-def phase1_pad(v, N_t: int, cfg: PrecisionConfig, opts: MatvecOptions):
-    """Zero-pad (R, N_t) -> (R, 2*N_t), cast to the pad level (fused)."""
-    return kops.pad_cast(v, 2 * N_t, cfg.phase_dtype("pad"),
-                         use_pallas=opts.fuse_pad_cast, interpret=opts.interpret)
-
-
-def phase2_fft(v_padded, cfg: PrecisionConfig):
-    """Batched rfft over the minor axis.  Returns split planes (R, K) at the
-    fft storage level; computes at >= f32 (complex lives only inside)."""
-    lvl = cfg.fft
-    x = v_padded.astype(prec.fft_compute_dtype(lvl))
-    v_hat = jnp.fft.rfft(x, axis=-1)
-    dt = prec.real_dtype(lvl)
-    return v_hat.real.astype(dt), v_hat.imag.astype(dt)
-
-
-def reorder_soti_to_tosi(re, im, level: str):
-    """(R, K) -> (K, R) transpose at the given (lowest-adjacent) level."""
-    dt = prec.real_dtype(level)
-    return re.astype(dt).T, im.astype(dt).T
-
-
-def reorder_tosi_to_soti(re, im, level: str):
-    dt = prec.real_dtype(level)
-    return re.astype(dt).T, im.astype(dt).T
-
-
-def reorder_soti_to_tosi_block(re, im, S: int, level: str):
-    """Multi-RHS reorder: stacked SOTI planes (S*R, K) -> TOSI panels
-    (K, R, S) with the RHS axis minor, at the lowest-adjacent level."""
-    dt = prec.real_dtype(level)
-    SR, K = re.shape
-    R = SR // S
-    f = lambda x: x.astype(dt).reshape(S, R, K).transpose(2, 1, 0)
-    return f(re), f(im)
-
-
-def reorder_tosi_to_soti_block(re, im, level: str):
-    """TOSI panels (K, R, S) -> stacked SOTI planes (S*R, K)."""
-    dt = prec.real_dtype(level)
-    K, R, S = re.shape
-    f = lambda x: x.astype(dt).transpose(2, 1, 0).reshape(S * R, K)
-    return f(re), f(im)
-
-
-def phase3_gemv(F_re, F_im, x_re, x_im, cfg: PrecisionConfig,
-                opts: MatvecOptions, adjoint: bool):
-    """Fourier-space block-diagonal matvec: for every frequency bin k,
-    d_hat[k] = F_hat[k] @ m_hat[k]  (or F_hat[k]^H d_hat[k] for F*)."""
-    dt = prec.real_dtype(cfg.gemv)
-    mode = "H" if adjoint else "N"
-    return kops.sbgemv(F_re.astype(dt), F_im.astype(dt),
-                       x_re.astype(dt), x_im.astype(dt), mode,
-                       out_dtype=dt, use_pallas=opts.use_pallas,
-                       block_n=opts.block_n, interpret=opts.interpret)
-
-
-def phase3_gemm(F_re, F_im, X_re, X_im, cfg: PrecisionConfig,
-                opts: MatvecOptions, adjoint: bool):
-    """Multi-RHS Phase 3: per frequency bin, an (N_d x n) x (n x S) block
-    matmul.  X panels are TOSI with the RHS axis minor: (K, R, S)."""
-    dt = prec.real_dtype(cfg.gemv)
-    mode = "H" if adjoint else "N"
-    return kops.sbgemm(F_re.astype(dt), F_im.astype(dt),
-                       X_re.astype(dt), X_im.astype(dt), mode,
-                       out_dtype=dt, use_pallas=opts.use_pallas,
-                       block_n=opts.block_n, block_s=opts.block_s,
-                       interpret=opts.interpret)
-
-
-def phase4_ifft(re, im, N_t: int, cfg: PrecisionConfig):
-    """Batched irfft back to the time domain: planes (R, K) -> (R, 2*N_t)."""
-    lvl = cfg.ifft
-    cdt = prec.complex_dtype(lvl)
-    v_hat = re.astype(cdt) + 1j * im.astype(cdt)
-    v = jnp.fft.irfft(v_hat, n=2 * N_t, axis=-1)
-    return v.astype(prec.real_dtype(lvl))
-
-
-def phase5_unpad(v_padded, N_t: int, cfg: PrecisionConfig, opts: MatvecOptions):
-    """Unpad (R, 2*N_t) -> (R, N_t) + cast to the reduce level (fused)."""
-    return kops.unpad_cast(v_padded, N_t, cfg.phase_dtype("reduce"),
-                           use_pallas=opts.fuse_pad_cast,
-                           interpret=opts.interpret)
-
-
-# ---------------------------------------------------------------------------
-# Full local pipeline
+# Local (per-shard) pipelines: plan construction + the shared executor.
 # ---------------------------------------------------------------------------
 
 def _local_matvec(F_re, F_im, m, N_t: int, cfg: PrecisionConfig,
@@ -151,37 +63,31 @@ def _local_matvec(F_re, F_im, m, N_t: int, cfg: PrecisionConfig,
     """The per-shard 5-phase pipeline (no collectives).  ``m`` is the local
     SOTI input block vector; returns the local (partial) SOTI output at the
     reduce level."""
-    v = phase1_pad(m, N_t, cfg, opts)                                 # ph 1
-    v_re, v_im = phase2_fft(v, cfg)                                   # ph 2
-    v_re, v_im = reorder_soti_to_tosi(v_re, v_im,
-                                      cfg.reorder_level("fft", "gemv"))
-    y_re, y_im = phase3_gemv(F_re, F_im, v_re, v_im, cfg, opts, adjoint)  # 3
-    y_re, y_im = reorder_tosi_to_soti(y_re, y_im,
-                                      cfg.reorder_level("gemv", "ifft"))
-    y = phase4_ifft(y_re, y_im, N_t, cfg)                             # ph 4
-    return phase5_unpad(y, N_t, cfg, opts)                            # ph 5a
+    plan = pipeline.matvec_plan(cfg, adjoint=adjoint)
+    return pipeline.run_plan(plan, m, {"F": (F_re, F_im)}, N_t=N_t,
+                             opts=opts)
 
 
 def _local_matmat(F_re, F_im, M, N_t: int, cfg: PrecisionConfig,
                   opts: MatvecOptions, adjoint: bool):
     """Multi-RHS per-shard pipeline.  ``M`` is (R, N_t, S): S stacked SOTI
-    block vectors, RHS axis minor.  Phases 1/2/4/5 run on a flattened
-    (S*R, time) layout — identical codepaths (and fused Pallas pad/cast
-    kernels) as the single-RHS case, with S amortizing the per-phase
-    launch cost; Phase 3 becomes an MXU-friendly SBGEMM."""
-    R, _, S = M.shape
-    flat = M.transpose(2, 0, 1).reshape(S * R, N_t)
-    v = phase1_pad(flat, N_t, cfg, opts)                              # ph 1
-    v_re, v_im = phase2_fft(v, cfg)                                   # ph 2
-    v_re, v_im = reorder_soti_to_tosi_block(
-        v_re, v_im, S, cfg.reorder_level("fft", "gemv"))
-    Y_re, Y_im = phase3_gemm(F_re, F_im, v_re, v_im, cfg, opts, adjoint)  # 3
-    Y_re, Y_im = reorder_tosi_to_soti_block(
-        Y_re, Y_im, cfg.reorder_level("gemv", "ifft"))
-    y = phase4_ifft(Y_re, Y_im, N_t, cfg)                             # ph 4
-    y = phase5_unpad(y, N_t, cfg, opts)                               # ph 5a
-    R_out = y.shape[0] // S
-    return y.reshape(S, R_out, N_t).transpose(1, 2, 0)
+    block vectors, RHS axis minor — same plan as the single-RHS case; the
+    executor flattens the block so phases 1/2/4/5 reuse the single-RHS
+    codepaths with S amortizing launch cost, and Phase 3 dispatches to the
+    MXU-friendly SBGEMM."""
+    return _local_matvec(F_re, F_im, M, N_t, cfg, opts, adjoint)
+
+
+def _local_gram(F_re, F_im, v, N_t: int, cfg: PrecisionConfig,
+                opts: MatvecOptions, space: str = "parameter",
+                mode: str = "exact", G_planes=None):
+    """Per-shard fused Gram pipeline (F*F or F F*).  ``mode="circulant"``
+    requires the precomputed per-bin Gram blocks in ``G_planes``."""
+    plan = pipeline.gram_plan(cfg, space=space, mode=mode)
+    operands = {"F": (F_re, F_im)}
+    if G_planes is not None:
+        operands["G"] = G_planes
+    return pipeline.run_plan(plan, v, operands, N_t=N_t, opts=opts)
 
 
 # ---------------------------------------------------------------------------
@@ -199,6 +105,11 @@ class FFTMatvec:
     (R, N_t, S).  I/O dtype follows the paper: the working precision at
     entry/exit is the highest level in use (f64 in paper mode, f32
     TPU-native).
+
+    All four entry points (matvec/rmatvec/matmat/rmatmat) — and the fused
+    Gram operator returned by :meth:`gram` — compile to
+    :mod:`repro.core.pipeline` plans and run through its shared executor;
+    the mesh paths wrap the same plan (plus Psum stages) in ``shard_map``.
     """
 
     F_hat_re: jax.Array          # (K, N_d, N_m) TOSI, stored at gemv level
@@ -250,11 +161,25 @@ class FFTMatvec:
         operator retuned to it.  ``full_result=True`` returns the
         :class:`repro.tune.TuneResult` instead (records, Pareto front,
         bounds, measurement counts).  Keywords are forwarded to
-        :func:`repro.tune.autotune` (``ladder``, ``variant``, ``cache``/
+        :func:`repro.tune.autotune` (``ladder``, ``variant`` — including
+        ``"gram"`` for the fused Hessian pipeline —, ``cache``/
         ``cache_path``, ``repeats``, ``mode``, ...)."""
         from repro.tune import autotune as _autotune   # deferred: tune builds on core
         res = _autotune(self, tol=tol, **kw)
         return res if full_result else res.op
+
+    def gram(self, space: str = "parameter", mode: str = "exact"):
+        """The fused Fourier-domain Gram operator (see
+        :class:`repro.core.gram.GramOperator`).
+
+        ``space="parameter"`` -> F*F (CGNR's normal operator);
+        ``space="data"`` -> F F* (the data-space Hessian's Gram part).
+        ``mode="exact"`` matches the composed ``rmatvec(matvec(v))`` to
+        roundoff in one fused pipeline; ``mode="circulant"`` applies the
+        precomputed per-bin blocks G_hat[k] in a single 5-phase pass —
+        half the FFT/reorder work, periodic-Gram semantics."""
+        from .gram import GramOperator  # deferred: gram builds on this class
+        return GramOperator.from_matvec(self, space=space, mode=mode)
 
     # -- shapes --------------------------------------------------------------
     @property
@@ -269,117 +194,53 @@ class FFTMatvec:
     def io_dtype(self):
         return prec.real_dtype(self.precision.highest())
 
-    # -- single-device paths --------------------------------------------------
-    def _matvec_single(self, m):
-        y = _local_matvec(self.F_hat_re, self.F_hat_im, m, self.N_t,
-                          self.precision, self.opts, adjoint=False)
-        return y.astype(self.io_dtype)
-
-    def _rmatvec_single(self, d):
-        y = _local_matvec(self.F_hat_re, self.F_hat_im, d, self.N_t,
-                          self.precision, self.opts, adjoint=True)
-        return y.astype(self.io_dtype)
-
-    def _matmat_single(self, M):
-        Y = _local_matmat(self.F_hat_re, self.F_hat_im, M, self.N_t,
-                          self.precision, self.opts, adjoint=False)
-        return Y.astype(self.io_dtype)
-
-    def _rmatmat_single(self, D):
-        Y = _local_matmat(self.F_hat_re, self.F_hat_im, D, self.N_t,
-                          self.precision, self.opts, adjoint=True)
-        return Y.astype(self.io_dtype)
-
-    # -- distributed paths ----------------------------------------------------
-    def _matvec_sharded(self, m):
-        row, col = self._row, self.col_axis
-        cfg, opts, N_t, io_dtype = self.precision, self.opts, self.N_t, self.io_dtype
-
-        def body(F_re, F_im, m_loc):
-            part = _local_matvec(F_re, F_im, m_loc, N_t, cfg, opts,
-                                 adjoint=False)
-            # Phase 5b: reduction over the processor-grid row (over cols)
-            # at the reduce precision (lower-precision comm is a paper knob).
-            part = part.astype(prec.real_dtype(cfg.reduce))
-            return jax.lax.psum(part, col).astype(io_dtype)
-
-        return shard_map(
-            body, mesh=self.mesh,
-            in_specs=(P(None, row, col), P(None, row, col), P(col, None)),
-            out_specs=P(row, None),
-        )(self.F_hat_re, self.F_hat_im, m)
-
     @property
     def _row(self):
         """Row axis (None for the paper's p_r = 1 regime)."""
         return self.row_axis if self.row_axis not in ((), None) else None
 
-    def _rmatvec_sharded(self, d):
+    # -- the one apply path ----------------------------------------------------
+    def _apply(self, x, *, adjoint: bool):
+        """Run one compiled matvec plan — single-device directly, mesh via
+        the same plan (plus its Psum stage) wrapped in ``shard_map``."""
+        cfg, opts, N_t, io_dtype = (self.precision, self.opts, self.N_t,
+                                    self.io_dtype)
+        if self.mesh is None:
+            plan = pipeline.matvec_plan(cfg, adjoint=adjoint)
+            y = pipeline.run_plan(plan, x, {"F": (self.F_hat_re,
+                                                  self.F_hat_im)},
+                                  N_t=N_t, opts=opts)
+            return y.astype(io_dtype)
+
         row, col = self._row, self.col_axis
-        cfg, opts, N_t, io_dtype = self.precision, self.opts, self.N_t, self.io_dtype
+        # F: input sharded over cols, reduce over cols, output over rows;
+        # F*: roles swapped (psum over rows only when the grid has > 1 row).
+        in_axis, out_axis = (row, col) if adjoint else (col, row)
+        psum_axis = row if adjoint else col
+        plan = pipeline.matvec_plan(cfg, adjoint=adjoint,
+                                    psum_axis=psum_axis)
 
-        def body(F_re, F_im, d_loc):
-            # Phase 1 broadcast: d arrives sharded over rows, replicated over
-            # cols (SPMD materializes the broadcast if it is not).
-            part = _local_matvec(F_re, F_im, d_loc, N_t, cfg, opts,
-                                 adjoint=True)
-            part = part.astype(prec.real_dtype(cfg.reduce))
-            if row is not None:
-                part = jax.lax.psum(part, row)
-            return part.astype(io_dtype)
+        def body(F_re, F_im, x_loc):
+            y = pipeline.run_plan(plan, x_loc, {"F": (F_re, F_im)},
+                                  N_t=N_t, opts=opts)
+            return y.astype(io_dtype)
 
-        return shard_map(
-            body, mesh=self.mesh,
-            in_specs=(P(None, row, col), P(None, row, col), P(row, None)),
-            out_specs=P(col, None),
-        )(self.F_hat_re, self.F_hat_im, d)
-
-    def _matmat_sharded(self, M):
-        row, col = self._row, self.col_axis
-        cfg, opts, N_t, io_dtype = self.precision, self.opts, self.N_t, self.io_dtype
-
-        def body(F_re, F_im, M_loc):
-            part = _local_matmat(F_re, F_im, M_loc, N_t, cfg, opts,
-                                 adjoint=False)
-            part = part.astype(prec.real_dtype(cfg.reduce))
-            return jax.lax.psum(part, col).astype(io_dtype)
-
+        tail = (None,) * (x.ndim - 1)
         return shard_map(
             body, mesh=self.mesh,
             in_specs=(P(None, row, col), P(None, row, col),
-                      P(col, None, None)),
-            out_specs=P(row, None, None),
-        )(self.F_hat_re, self.F_hat_im, M)
-
-    def _rmatmat_sharded(self, D):
-        row, col = self._row, self.col_axis
-        cfg, opts, N_t, io_dtype = self.precision, self.opts, self.N_t, self.io_dtype
-
-        def body(F_re, F_im, D_loc):
-            part = _local_matmat(F_re, F_im, D_loc, N_t, cfg, opts,
-                                 adjoint=True)
-            part = part.astype(prec.real_dtype(cfg.reduce))
-            if row is not None:
-                part = jax.lax.psum(part, row)
-            return part.astype(io_dtype)
-
-        return shard_map(
-            body, mesh=self.mesh,
-            in_specs=(P(None, row, col), P(None, row, col),
-                      P(row, None, None)),
-            out_specs=P(col, None, None),
-        )(self.F_hat_re, self.F_hat_im, D)
+                      P(in_axis, *tail)),
+            out_specs=P(out_axis, *tail),
+        )(self.F_hat_re, self.F_hat_im, x)
 
     # -- public API ------------------------------------------------------------
     def matvec(self, m):
         """d = F m.   m: (N_m, N_t) SOTI -> d: (N_d, N_t) SOTI."""
-        fn = self._matvec_sharded if self.mesh is not None else self._matvec_single
-        return fn(m)
+        return self._apply(m, adjoint=False)
 
     def rmatvec(self, d):
         """m = F* d.  d: (N_d, N_t) SOTI -> m: (N_m, N_t) SOTI."""
-        fn = self._rmatvec_sharded if self.mesh is not None else self._rmatvec_single
-        return fn(d)
+        return self._apply(d, adjoint=True)
 
     def matmat(self, M):
         """D = F M over S stacked right-hand sides.
@@ -390,16 +251,14 @@ class FFTMatvec:
         """
         if M.ndim == 2:
             return self.matmat(M[..., None])[..., 0]
-        fn = self._matmat_sharded if self.mesh is not None else self._matmat_single
-        return fn(M)
+        return self._apply(M, adjoint=False)
 
     def rmatmat(self, D):
         """M = F* D over S stacked right-hand sides.
         D: (N_d, N_t, S) -> M: (N_m, N_t, S)."""
         if D.ndim == 2:
             return self.rmatmat(D[..., None])[..., 0]
-        fn = self._rmatmat_sharded if self.mesh is not None else self._rmatmat_single
-        return fn(D)
+        return self._apply(D, adjoint=True)
 
     def jitted(self):
         """Jit-compiled (matvec, rmatvec) pair."""
@@ -428,25 +287,24 @@ class FFTMatvec:
 
 def phase_callables(op: FFTMatvec, adjoint: bool = False):
     """Separately jitted per-phase functions, keyed by the paper's phase
-    names, each consuming the previous phase's output."""
-    cfg, opts, N_t = op.precision, op.opts, op.N_t
+    names, each consuming the previous phase's output.  Slices the compiled
+    plan into phase groups (the reorders time with the gemv they wrap,
+    matching the paper's breakdown)."""
+    plan = pipeline.matvec_plan(op.precision, adjoint=adjoint)
+    operands = {"F": (op.F_hat_re, op.F_hat_im)}
+    N_t, opts, io_dtype = op.N_t, op.opts, op.io_dtype
+    # group by stage kind (reorders attach to the gemv they wrap), robust
+    # to the plan's exact stage order
+    group_of = {"pad": "pad", "fft": "fft", "reorder": "gemv",
+                "gemv": "gemv", "ifft": "ifft", "unpad": "reduce"}
+    groups = {name: tuple(s for s in plan if group_of[s.kind] == name)
+              for name in ("pad", "fft", "gemv", "ifft", "reduce")}
 
-    def f1(v):
-        return phase1_pad(v, N_t, cfg, opts)
+    def make(stages, final: bool):
+        def f(x):
+            y = pipeline.run_stages(stages, x, operands, N_t=N_t, opts=opts)
+            return y.astype(io_dtype) if final else y
+        return jax.jit(f)
 
-    def f2(v):
-        return phase2_fft(v, cfg)
-
-    def f3(planes):
-        re, im = reorder_soti_to_tosi(*planes, cfg.reorder_level("fft", "gemv"))
-        y = phase3_gemv(op.F_hat_re, op.F_hat_im, re, im, cfg, opts, adjoint)
-        return reorder_tosi_to_soti(*y, cfg.reorder_level("gemv", "ifft"))
-
-    def f4(planes):
-        return phase4_ifft(*planes, N_t, cfg)
-
-    def f5(v):
-        return phase5_unpad(v, N_t, cfg, opts).astype(op.io_dtype)
-
-    return {"pad": jax.jit(f1), "fft": jax.jit(f2), "gemv": jax.jit(f3),
-            "ifft": jax.jit(f4), "reduce": jax.jit(f5)}
+    return {name: make(stages, final=(name == "reduce"))
+            for name, stages in groups.items()}

@@ -10,17 +10,22 @@ Hessian  H_d = F G_pr F^T + G_n  has dimension (N_d N_t)^2 and is built
 from N_d*N_t actions of F and F* — the "outer-loop" workload (Remark 1)
 that motivates the mixed-precision speedup: optimal-sensor-placement
 re-assembles H_d for many candidate sensor sets (O(1e5) matvecs each).
+
+Every Hessian action here runs through the fused data-space
+:class:`~repro.core.GramOperator` (one stage-graph pipeline per action
+instead of a composed rmatvec/matvec pair), and the dense assembly batches
+S-wide identity blocks through it so each pipeline is SBGEMM-backed.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from .fftmatvec import FFTMatvec
+from .gram import GramOperator
 
 
 @dataclasses.dataclass
@@ -33,35 +38,46 @@ class GaussianInverseProblem:
     def data_dim(self) -> int:
         return self.op.N_d * self.op.N_t
 
+    @property
+    def gram(self) -> GramOperator:
+        """The fused data-space Gram F F* behind every Hessian action
+        (exact mode: matches the composed pair to roundoff)."""
+        g = getattr(self, "_gram", None)
+        if g is None or g.op is not self.op:
+            g = self.op.gram(space="data", mode="exact")
+            self._gram = g
+        return g
+
     # -- dense data-space Hessian (test/demo scale) --------------------------
-    def assemble_data_space_hessian(self) -> jax.Array:
-        """H_d = F G_pr F^T + G_n via N_d*N_t adjoint+forward matvec pairs,
-        batched with vmap over unit vectors (columns)."""
+    def assemble_data_space_hessian(self, *, chunk: int = 32) -> jax.Array:
+        """H_d = F G_pr F^T + G_n assembled from S-wide identity-block
+        ``matmat`` chunks: ceil(N_d*N_t / chunk) SBGEMM-backed fused-Gram
+        pipelines instead of one composed rmatvec/matvec pair per unit
+        vector."""
         op, Nd, Nt = self.op, self.op.N_d, self.op.N_t
-
-        def column(i):
-            e = jnp.zeros((Nd * Nt,), op.io_dtype).at[i].set(1.0)
-            e = e.reshape(Nd, Nt)
-            col = op.matvec(self.prior_var * op.rmatvec(e))
-            return col.reshape(Nd * Nt)
-
-        H = jax.lax.map(column, jnp.arange(Nd * Nt))  # rows == cols (symmetric)
-        return H.T + self.noise_var * jnp.eye(Nd * Nt, dtype=op.io_dtype)
+        n = Nd * Nt
+        chunk = max(1, min(chunk, n))
+        eye = jnp.eye(n, dtype=op.io_dtype)
+        cols = []
+        for s0 in range(0, n, chunk):
+            E = eye[:, s0:s0 + chunk].reshape(Nd, Nt, -1)
+            cols.append(self.hessian_action_block(E).reshape(n, -1))
+        return jnp.concatenate(cols, axis=1)
 
     # -- matrix-free Hessian action -----------------------------------------
     def hessian_action(self, v_flat: jax.Array) -> jax.Array:
-        """(F G_pr F^T + G_n) v for a flattened data-space vector."""
+        """(F G_pr F^T + G_n) v for a flattened data-space vector — one
+        fused Gram pipeline per action."""
         op = self.op
         v = v_flat.reshape(op.N_d, op.N_t)
-        out = op.matvec(self.prior_var * op.rmatvec(v)) + self.noise_var * v
+        out = self.prior_var * self.gram.apply(v) + self.noise_var * v
         return out.reshape(-1)
 
     def hessian_action_block(self, V: jax.Array) -> jax.Array:
         """(F G_pr F^T + G_n) V on an (N_d, N_t[, S]) observation block —
-        the multi-RHS Hessian action (one SBGEMM-backed matmat pair per
-        application, shared across all S columns)."""
-        return (self.op.matmat(self.prior_var * self.op.rmatmat(V))
-                + self.noise_var * V)
+        the multi-RHS Hessian action (one SBGEMM-backed fused Gram
+        pipeline per application, shared across all S columns)."""
+        return self.prior_var * self.gram.apply(V) + self.noise_var * V
 
     # -- MAP point ------------------------------------------------------------
     def map_point(self, d_obs: jax.Array, m_prior: jax.Array | None = None,
@@ -93,9 +109,10 @@ class GaussianInverseProblem:
         Tikhonov least squares  min ||F dm - r||^2 + (noise/prior) ||dm||^2
         with r = d_obs - F m_prior — LSQR on the factored problem
         (``method="lsqr"``) or CGNR on the normal equations
-        (``method="cgnr"``).  ``d_obs`` may be a stacked (N_d, N_t, S)
-        block: all S observation sets are reconstructed sharing each
-        F / F* application.  Returns ``(m_map, SolveResult)``.
+        (``method="cgnr"``; its F*F inner product runs through the fused
+        parameter-space Gram pipeline).  ``d_obs`` may be a stacked
+        (N_d, N_t, S) block: all S observation sets are reconstructed
+        sharing each F / F* application.  Returns ``(m_map, SolveResult)``.
         """
         from repro import solvers  # deferred: solvers layers on top of core
 
@@ -123,10 +140,11 @@ class GaussianInverseProblem:
         return m_map, res
 
     # -- optimal experimental design ingredient ------------------------------
-    def expected_information_gain(self) -> jax.Array:
+    def expected_information_gain(self, *, chunk: int = 32) -> jax.Array:
         """KL(post || prior) for the linear-Gaussian problem (closed form,
-        paper Remark 1): 0.5 * logdet(I + G_n^{-1} F G_pr F^T)."""
-        H = self.assemble_data_space_hessian()
+        paper Remark 1): 0.5 * logdet(I + G_n^{-1} F G_pr F^T) — routed
+        through the chunked SBGEMM-backed Hessian assembly."""
+        H = self.assemble_data_space_hessian(chunk=chunk)
         M = H / self.noise_var  # = I + G_n^{-1} F G_pr F^T
         sign, logdet = jnp.linalg.slogdet(M)
         return 0.5 * logdet

@@ -1,0 +1,329 @@
+"""Stage-graph pipeline core: typed stages -> compiled plans -> one executor.
+
+The FFTMatvec pipeline (paper §2.4) is a linear graph of memory and compute
+stages.  Rather than hand-writing one function per (direction x layout x
+distribution) combination — which is how the forward/adjoint x single/multi-RHS
+x local/sharded paths used to be eight near-identical copies — this module
+*compiles* each variant to a :class:`Plan` (a tuple of :class:`Stage`
+descriptors, each carrying its precision level and layout metadata) and runs
+every plan through a single executor, :func:`run_plan`.
+
+    stages      Pad, FFT, Reorder, Gemv (SBGEMV/SBGEMM by RHS count, or the
+                per-bin Gram GEMM), IFFT, Mask, Unpad, Psum — each a frozen
+                dataclass: hashable, so plans can be jit static arguments.
+    plans       :func:`matvec_plan` (forward/adjoint, optionally ending in a
+                mesh reduction) and :func:`gram_plan` (the fused Fourier-domain
+                Gram operator, exact or circulant).
+    executor    :func:`run_plan` folds the input through the stage list;
+                multi-RHS blocks (R, N_t, S) are flattened to stacked planes
+                at entry and restored at exit, so S = 1 and S > 1 share every
+                stage implementation.
+    distributed the mesh paths wrap the *same* plan (plus Psum stages) in
+                ``shard_map`` — see :meth:`repro.core.FFTMatvec._apply`.
+
+Precision semantics are unchanged from the hand-written pipelines: every
+stage carries one level of the h < s < d ladder; reorder/mask memory stages
+run at the lower of the adjacent compute phases' levels (paper footnote 8).
+
+Instrumentation: :func:`stage_counts` counts a plan's stages statically and
+:func:`record_stages` counts stages as the executor runs them (trace-time
+under ``jit``) — this is how the fused Gram pipeline's "half the FFT/reorder
+work" claim is verified in the tests rather than asserted.
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+from typing import Iterator, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from . import precision as prec
+from .precision import PrecisionConfig
+
+STAGE_KINDS = ("pad", "fft", "reorder", "gemv", "ifft", "mask", "unpad",
+               "psum")
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One pipeline stage: what to run, at which precision, on what layout.
+
+    ``kind``     one of :data:`STAGE_KINDS`.
+    ``level``    precision level ("h"/"s"/"d") the stage computes/stores at.
+    ``adjoint``  gemv: conjugate-transpose flavor (F* pipelines).
+    ``to_tosi``  reorder direction (SOTI -> TOSI or back).
+    ``operand``  which operator planes feed a gemv stage ("F" for the
+                 Fourier block column, "G" for precomputed Gram blocks).
+    ``axis``     psum: mesh axis name to reduce over.
+    """
+
+    kind: str
+    level: str
+    adjoint: bool = False
+    to_tosi: bool = True
+    operand: str = "F"
+    axis: Optional[str] = None
+
+    def __post_init__(self):
+        if self.kind not in STAGE_KINDS:
+            raise ValueError(f"unknown stage kind {self.kind!r}")
+        if self.level not in ("h", "s", "d"):
+            raise ValueError(f"bad precision level {self.level!r}")
+
+
+Plan = Tuple[Stage, ...]
+
+
+# ---------------------------------------------------------------------------
+# Stage implementations.  Carrier convention: time-domain data is a single
+# real array of stacked SOTI rows (S*R, T); Fourier-domain data is a split
+# (re, im) plane pair, SOTI (S*R, K) before/after the reorders and TOSI
+# (K, R[, S]) between them.
+# ---------------------------------------------------------------------------
+
+def reorder_planes(re, im, level: str, *, to_tosi: bool, S: int = 1):
+    """The SOTI<->TOSI reorder, parameterized over direction and RHS count.
+
+    S = 1: a plain transpose (R, K) <-> (K, R), the paper's "purely memory"
+    intermediate phase.  S > 1: stacked SOTI planes (S*R, K) <-> TOSI panels
+    (K, R, S) with the RHS axis minor.  Runs at the lower of the adjacent
+    compute phases' levels (the cast fuses with the copy).
+    """
+    dt = prec.real_dtype(level)
+    if S == 1:
+        return re.astype(dt).T, im.astype(dt).T
+    if to_tosi:
+        SR, K = re.shape
+        R = SR // S
+        f = lambda x: x.astype(dt).reshape(S, R, K).transpose(2, 1, 0)
+    else:
+        f = lambda x: x.astype(dt).transpose(2, 1, 0).reshape(-1, x.shape[0])
+    return f(re), f(im)
+
+
+def _pad(stage, x, operands, N_t, S, opts):
+    return kops.pad_cast(x, 2 * N_t, prec.real_dtype(stage.level),
+                         use_pallas=opts.fuse_pad_cast,
+                         interpret=opts.interpret)
+
+
+def _fft(stage, x, operands, N_t, S, opts):
+    # batched rfft over the minor (time) axis; computes at >= f32 (complex
+    # lives only inside the stage), stores split planes at the fft level
+    lvl = stage.level
+    v_hat = jnp.fft.rfft(x.astype(prec.fft_compute_dtype(lvl)), axis=-1)
+    dt = prec.real_dtype(lvl)
+    return v_hat.real.astype(dt), v_hat.imag.astype(dt)
+
+
+def _reorder(stage, x, operands, N_t, S, opts):
+    re, im = x
+    return reorder_planes(re, im, stage.level, to_tosi=stage.to_tosi, S=S)
+
+
+def _gemv(stage, x, operands, N_t, S, opts):
+    # Fourier-space block-diagonal product: per frequency bin k an
+    # (m x n) x (n[, S]) contraction — SBGEMV for one RHS, SBGEMM for a
+    # stacked block.  ``operand`` selects F_hat or the precomputed Gram
+    # blocks G_hat (the fused Hessian path).
+    A_re, A_im = operands[stage.operand]
+    dt = prec.real_dtype(stage.level)
+    mode = "H" if stage.adjoint else "N"
+    x_re, x_im = (p.astype(dt) for p in x)
+    if S == 1:
+        return kops.sbgemv(A_re.astype(dt), A_im.astype(dt), x_re, x_im,
+                           mode, out_dtype=dt, use_pallas=opts.use_pallas,
+                           block_n=opts.block_n, interpret=opts.interpret)
+    return kops.sbgemm(A_re.astype(dt), A_im.astype(dt), x_re, x_im, mode,
+                       out_dtype=dt, use_pallas=opts.use_pallas,
+                       block_n=opts.block_n, block_s=opts.block_s,
+                       interpret=opts.interpret)
+
+
+def _ifft(stage, x, operands, N_t, S, opts):
+    lvl = stage.level
+    cdt = prec.complex_dtype(lvl)
+    v_hat = x[0].astype(cdt) + 1j * x[1].astype(cdt)
+    v = jnp.fft.irfft(v_hat, n=2 * N_t, axis=-1)
+    return v.astype(prec.real_dtype(lvl))
+
+
+def _mask(stage, x, operands, N_t, S, opts):
+    # The inter-pipeline truncation (the P1^T P1 projector of the circulant
+    # embedding) as ONE memory stage at ONE level: truncate + zero-extend,
+    # replacing the composed path's unpad -> io-cast -> pad cast chain.
+    # Implemented as slice+pad rather than a masked in-place update — XLA
+    # lowers this measurably faster — through the same fused Pallas
+    # pad/cast kernels as the boundary phases when enabled.
+    dt = prec.real_dtype(stage.level)
+    y = kops.unpad_cast(x, N_t, dt, use_pallas=opts.fuse_pad_cast,
+                        interpret=opts.interpret)
+    return kops.pad_cast(y, 2 * N_t, dt, use_pallas=opts.fuse_pad_cast,
+                         interpret=opts.interpret)
+
+
+def _unpad(stage, x, operands, N_t, S, opts):
+    return kops.unpad_cast(x, N_t, prec.real_dtype(stage.level),
+                           use_pallas=opts.fuse_pad_cast,
+                           interpret=opts.interpret)
+
+
+def _psum(stage, x, operands, N_t, S, opts):
+    # Mesh reduction at the stage's level (lower-precision comm is a paper
+    # knob).  Works on either carrier: a plane pair psums plane-wise.
+    dt = prec.real_dtype(stage.level)
+    if isinstance(x, tuple):
+        return tuple(jax.lax.psum(p.astype(dt), stage.axis) for p in x)
+    return jax.lax.psum(x.astype(dt), stage.axis)
+
+
+_STAGE_IMPLS = {"pad": _pad, "fft": _fft, "reorder": _reorder, "gemv": _gemv,
+                "ifft": _ifft, "mask": _mask, "unpad": _unpad, "psum": _psum}
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+_active_counters: list = []
+
+
+@contextlib.contextmanager
+def record_stages() -> Iterator[collections.Counter]:
+    """Count stages as the executor runs them.
+
+    Yields a ``Counter`` mapping stage kind -> executions.  Counting happens
+    when the executor's Python loop runs — i.e. every call for eager
+    pipelines, once per trace under ``jit`` — so tests run the operators
+    un-jitted inside this context.
+    """
+    counter: collections.Counter = collections.Counter()
+    _active_counters.append(counter)
+    try:
+        yield counter
+    finally:
+        _active_counters.remove(counter)
+
+
+def stage_counts(plan: Plan) -> collections.Counter:
+    """Static stage census of a plan: ``{kind: count}``."""
+    return collections.Counter(stage.kind for stage in plan)
+
+
+def run_stages(stages: Sequence[Stage], x, operands: Mapping, *, N_t: int,
+               opts, S: int = 1):
+    """Fold ``x`` through ``stages`` (no layout promotion — see run_plan)."""
+    for stage in stages:
+        for counter in _active_counters:
+            counter[stage.kind] += 1
+        x = _STAGE_IMPLS[stage.kind](stage, x, operands, N_t, S, opts)
+    return x
+
+
+def run_plan(plan: Plan, x, operands: Mapping, *, N_t: int, opts):
+    """Execute a compiled plan on a SOTI block vector.
+
+    ``x`` is (R, N_t) for one right-hand side or (R, N_t, S) for a stacked
+    block (RHS axis minor); blocks are flattened to (S*R, N_t) stacked
+    planes so phases 1/2/4/5 share the single-RHS codepaths (and fused
+    Pallas pad/cast kernels), with Phase 3 dispatching to SBGEMM.
+    ``operands`` maps operand tags ("F", "G") to split (re, im) TOSI planes.
+    """
+    if x.ndim == 3:
+        R, _, S = x.shape
+        flat = x.transpose(2, 0, 1).reshape(S * R, N_t)
+        y = run_stages(plan, flat, operands, N_t=N_t, opts=opts, S=S)
+        R_out = y.shape[0] // S
+        return y.reshape(S, R_out, N_t).transpose(1, 2, 0)
+    return run_stages(plan, x, operands, N_t=N_t, opts=opts, S=1)
+
+
+# ---------------------------------------------------------------------------
+# Plan builders
+# ---------------------------------------------------------------------------
+
+def matvec_plan(cfg: PrecisionConfig, *, adjoint: bool = False,
+                psum_axis: Optional[str] = None, operand: str = "F") -> Plan:
+    """The 5-phase matvec pipeline as a plan (paper §2.4).
+
+    Forward (``d = F m``) and adjoint (``m = F* d``) differ only in the
+    gemv stage's conjugate-transpose flag; the distributed version appends
+    a Psum stage over the mesh axis the local contraction was partial in.
+    ``operand`` selects the planes the gemv stage contracts against (the
+    circulant Gram plan is this same pipeline over the "G" blocks).
+    """
+    stages = [
+        Stage("pad", cfg.pad),
+        Stage("fft", cfg.fft),
+        Stage("reorder", cfg.reorder_level("fft", "gemv"), to_tosi=True),
+        Stage("gemv", cfg.gemv, adjoint=adjoint, operand=operand),
+        Stage("reorder", cfg.reorder_level("gemv", "ifft"), to_tosi=False),
+        Stage("ifft", cfg.ifft),
+        Stage("unpad", cfg.reduce),
+    ]
+    if psum_axis is not None:
+        stages.append(Stage("psum", cfg.reduce, axis=psum_axis))
+    return tuple(stages)
+
+
+def gram_plan(cfg: PrecisionConfig, *, space: str = "parameter",
+              mode: str = "exact", mid_psum_axis: Optional[str] = None,
+              psum_axis: Optional[str] = None) -> Plan:
+    """The fused Fourier-domain Gram pipeline (Hessian actions, Remark 1).
+
+    ``space="parameter"`` builds F*F (CGNR's normal operator),
+    ``space="data"`` builds F F* (the data-space Hessian's Gram part).
+
+    ``mode="exact"`` chains both per-bin GEMMs through ONE pipeline:
+    pad -> FFT -> GEMM -> IFFT -> *mask* -> FFT -> GEMM^H -> IFFT -> unpad.
+    The mask stage is the inter-operator truncation (the circulant
+    embedding's P^T P projector) fused in place of the composed path's
+    unpad -> cast -> pad round trip; the result matches the composed
+    ``rmatvec(matvec(v))`` to roundoff.
+
+    ``mode="circulant"`` applies the precomputed per-bin Gram blocks
+    G_hat[k] (operand "G") in a single 5-phase pass — exactly half the
+    FFT/IFFT and reorder stages of the composed path.  It computes the
+    *periodic* (circulant) Gram: the classic circulant approximation of the
+    Toeplitz normal operator, exact only up to the truncation wrap term —
+    use it as a preconditioner or for screening, not where the composed
+    operator's value is required.
+    """
+    if space not in ("parameter", "data"):
+        raise ValueError(f"unknown gram space {space!r}")
+    if mode == "circulant":
+        # the matvec pipeline verbatim, contracting the per-bin G blocks
+        return matvec_plan(cfg, psum_axis=psum_axis, operand="G")
+    if mode != "exact":
+        raise ValueError(f"unknown gram mode {mode!r}")
+    # exact: parameter space runs F then F* (first gemv forward), data space
+    # F* then F.  The mid psum completes the first contraction on a mesh.
+    first_adjoint = space == "data"
+    mid_level = cfg.reorder_level("gemv", "ifft")
+    stages = [
+        Stage("pad", cfg.pad),
+        Stage("fft", cfg.fft),
+        Stage("reorder", cfg.reorder_level("fft", "gemv"), to_tosi=True),
+        Stage("gemv", cfg.gemv, adjoint=first_adjoint),
+    ]
+    if mid_psum_axis is not None:
+        stages.append(Stage("psum", mid_level, axis=mid_psum_axis))
+    stages += [
+        Stage("reorder", mid_level, to_tosi=False),
+        Stage("ifft", cfg.ifft),
+        Stage("mask", prec.min_level(cfg.ifft, cfg.fft)),
+        Stage("fft", cfg.fft),
+        Stage("reorder", cfg.reorder_level("fft", "gemv"), to_tosi=True),
+        Stage("gemv", cfg.gemv, adjoint=not first_adjoint),
+        Stage("reorder", cfg.reorder_level("gemv", "ifft"), to_tosi=False),
+        Stage("ifft", cfg.ifft),
+        Stage("unpad", cfg.reduce),
+    ]
+    if psum_axis is not None:
+        stages.append(Stage("psum", cfg.reduce, axis=psum_axis))
+    return tuple(stages)

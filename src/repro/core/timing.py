@@ -28,9 +28,9 @@ from typing import Callable, Optional
 
 import jax
 
-from .fftmatvec import _local_matmat, _local_matvec
+from .fftmatvec import _local_gram, _local_matmat, _local_matvec
 
-VARIANTS = ("matvec", "rmatvec", "matmat", "rmatmat")
+VARIANTS = ("matvec", "rmatvec", "matmat", "rmatmat", "gram")
 
 
 def time_callable(fn: Callable, arg, repeats: int, warmup: int = 2,
@@ -102,14 +102,22 @@ class TimingHarness:
 
     # -- jit cache ----------------------------------------------------------
     def _shared(self, family: str):
-        """One jitted applier per family ("vec"/"mat"), config static."""
+        """One jitted applier per family ("vec"/"mat"/"gram"), config
+        static."""
         fn = self._jitted.get(family)
         if fn is None:
-            local = _local_matvec if family == "vec" else _local_matmat
+            if family == "gram":
+                def apply(F_re, F_im, x, *, N_t, cfg, opts, adjoint,
+                          io_dtype):
+                    return _local_gram(F_re, F_im, x, N_t, cfg,
+                                       opts).astype(io_dtype)
+            else:
+                local = _local_matvec if family == "vec" else _local_matmat
 
-            def apply(F_re, F_im, x, *, N_t, cfg, opts, adjoint, io_dtype):
-                return local(F_re, F_im, x, N_t, cfg, opts,
-                             adjoint).astype(io_dtype)
+                def apply(F_re, F_im, x, *, N_t, cfg, opts, adjoint,
+                          io_dtype):
+                    return local(F_re, F_im, x, N_t, cfg, opts,
+                                 adjoint).astype(io_dtype)
 
             fn = jax.jit(apply, static_argnames=("N_t", "cfg", "opts",
                                                  "adjoint", "io_dtype"))
@@ -129,7 +137,9 @@ class TimingHarness:
             key = (variant, id(op))
             fn = self._jitted.get(key)
             if fn is None:
-                fn = jax.jit(getattr(op, variant))
+                target = (op.gram(space="parameter").apply
+                          if variant == "gram" else getattr(op, variant))
+                fn = jax.jit(target)
                 # bound-method closures pin the operator's sharded arrays;
                 # cap how many a long-lived harness retains (FIFO evict)
                 mesh_keys = [k for k in self._jitted
@@ -138,7 +148,8 @@ class TimingHarness:
                     del self._jitted[mesh_keys[0]]
                 self._jitted[key] = fn
             return fn
-        family = "vec" if variant in ("matvec", "rmatvec") else "mat"
+        family = ("gram" if variant == "gram"
+                  else "vec" if variant in ("matvec", "rmatvec") else "mat")
         adjoint = variant in ("rmatvec", "rmatmat")
         shared = self._shared(family)
         F_re, F_im = op.F_hat_re, op.F_hat_im

@@ -225,6 +225,50 @@ def sbgemm(A_re, A_im, X_re, X_im, mode: str = "N", *, out_dtype=None,
     return Y_re.astype(out_dtype), Y_im.astype(out_dtype)
 
 
+def sbgemm_gram(A_re, A_im, *, space: str = "parameter", out_dtype=None,
+                use_pallas: bool | str = "auto", block_n: int = 512,
+                interpret: bool = False):
+    """Per-bin Hermitian Gram blocks: G[k] = A[k]^H A[k] ("parameter") or
+    A[k] A[k]^H ("data") on split planes, with the same dispatch logic as
+    the GEMV/GEMM paths.
+
+    A planes (B, m, n) -> G planes (B, n, n) or (B, m, m).  The returned
+    planes are exactly Hermitian (G_re symmetric, G_im antisymmetric with a
+    zero diagonal): roundoff asymmetry from the accumulation order is
+    symmetrized away, so downstream Gram pipelines can rely on G == G^H.
+    Setup-phase code (paper Phase 0) — run once per operator, not per apply.
+    """
+    B, m, n = A_re.shape
+    out_dtype = out_dtype or A_re.dtype
+    if space == "data":
+        # A A^H == (A^H)^H (A^H): reuse the parameter kernel on the
+        # conjugate-transposed planes.
+        A_re = A_re.transpose(0, 2, 1)
+        A_im = -A_im.transpose(0, 2, 1)
+        m, n = n, m
+    elif space != "parameter":
+        raise ValueError(f"bad gram space {space!r}")
+    if A_re.dtype == jnp.float64:
+        use_pallas = False  # Pallas TPU has no f64; paper mode runs via XLA.
+    if use_pallas == "auto":
+        use_pallas = use_custom_kernel(m, n, "H")
+    if not use_pallas:
+        G_re, G_im = _ref.sbgemm_gram_ref(A_re, A_im, "parameter")
+    else:
+        bn = min(block_n, max(128, n))
+        Ar, _ = _pad_to(A_re, 1, 8)
+        Ai, _ = _pad_to(A_im, 1, 8)
+        Ar, n0 = _pad_to(Ar, 2, bn)
+        Ai, _ = _pad_to(Ai, 2, bn)
+        G_re, G_im = _sbgemv.sbgemm_gram_complex(Ar, Ai, block_n=bn,
+                                                 interpret=interpret)
+        G_re, G_im = G_re[:, :n, :n], G_im[:, :n, :n]
+    # enforce exact Hermitian symmetry (kills accumulation-order roundoff)
+    G_re = 0.5 * (G_re + G_re.transpose(0, 2, 1))
+    G_im = 0.5 * (G_im - G_im.transpose(0, 2, 1))
+    return G_re.astype(out_dtype), G_im.astype(out_dtype)
+
+
 def sbgemm_real(A, X, mode: str = "N", *, out_dtype=None,
                 use_pallas: bool | str = "auto", block_n: int = 512,
                 block_s: int = 128, interpret: bool = False):

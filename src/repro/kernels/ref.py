@@ -78,6 +78,32 @@ def sbgemm_real_ref(A, X, mode: str = "N"):
     return Y.astype(A.dtype)
 
 
+def sbgemm_gram_ref(A_re, A_im, space: str = "parameter"):
+    """Per-batch Hermitian Gram blocks on split re/im planes.
+
+    A planes (B, m, n).  ``space="parameter"``: G = A^H A, (B, n, n);
+    ``space="data"``: G = A A^H, (B, m, m).  G is Hermitian per batch
+    (G == conj(G)^T; the imaginary diagonal is exactly zero up to the
+    accumulator's roundoff).  Accumulation in f32 (f64 under x64 for f64
+    inputs).  Returns (G_re, G_im) in the input dtype.
+    """
+    acc = jnp.float64 if A_re.dtype == jnp.float64 else jnp.float32
+    Ar, Ai = A_re.astype(acc), A_im.astype(acc)
+    if space == "parameter":
+        e = lambda X, Y: jnp.einsum("bmn,bmk->bnk", X, Y)
+        # (Ar - i Ai)^T (Ar + i Ai)
+        G_re = e(Ar, Ar) + e(Ai, Ai)
+        G_im = e(Ar, Ai) - e(Ai, Ar)
+    elif space == "data":
+        e = lambda X, Y: jnp.einsum("bmn,bkn->bmk", X, Y)
+        # (Ar + i Ai) (Ar^T - i Ai^T)
+        G_re = e(Ar, Ar) + e(Ai, Ai)
+        G_im = e(Ai, Ar) - e(Ar, Ai)
+    else:
+        raise ValueError(f"bad gram space {space!r}")
+    return G_re.astype(A_re.dtype), G_im.astype(A_re.dtype)
+
+
 def sbgemm_complex_ref(A_re, A_im, X_re, X_im, mode: str = "N"):
     """Strided-batched complex GEMM on split re/im planes.
 

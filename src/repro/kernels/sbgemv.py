@@ -318,6 +318,51 @@ def sbgemm_n_complex(A_re, A_im, X_re, X_im, *, block_n: int = 512,
 
 
 # ---------------------------------------------------------------------------
+# Per-bin Gram blocks: G = A^H A  (the Fourier-domain Hessian setup).
+#   A planes: (B, m, n)  ->  G planes: (B, n, n) in f32.
+# Grid (B, i_tiles, j_tiles): every step writes a distinct (bi x bj) output
+# tile from TWO column tiles of A.  Hermitian-aware: each A tile pair is
+# loaded once and serves both the real and imaginary output planes (the
+# same single-read traffic trick as the GEMV kernels), and the strictly
+# conjugate-symmetric structure (G == conj(G)^T) is enforced exactly by the
+# ops-layer wrapper, which also derives the data-space twin A A^H from this
+# kernel on the conjugate-transposed planes.
+# ---------------------------------------------------------------------------
+
+def _sbgemm_gram_kernel(Ari_ref, Arj_ref, Aii_ref, Aij_ref, Gr_ref, Gi_ref):
+    Ari = Ari_ref[0]                    # (m, bi)
+    Arj = Arj_ref[0]                    # (m, bj)
+    Aii = Aii_ref[0]
+    Aij = Aij_ref[0]
+    # G = (Ar - i Ai)^T (Ar + i Ai), contracted over the short m axis
+    Gr_ref[0] = _dg_t(Ari, Arj) + _dg_t(Aii, Aij)
+    Gi_ref[0] = _dg_t(Ari, Aij) - _dg_t(Aii, Arj)
+
+
+def sbgemm_gram_complex(A_re, A_im, *, block_n: int = 512,
+                        interpret: bool = False):
+    """Per-batch Gram blocks G = A^H A on split planes.  m % 8 == 0,
+    n % block_n == 0.  Returns (G_re, G_im) f32 of shape (B, n, n)."""
+    B, m, n = A_re.shape
+    assert n % block_n == 0
+    grid = (B, n // block_n, n // block_n)
+    spec_i = pl.BlockSpec((1, m, block_n), lambda b, i, j: (b, 0, i))
+    spec_j = pl.BlockSpec((1, m, block_n), lambda b, i, j: (b, 0, j))
+    spec_G = pl.BlockSpec((1, block_n, block_n), lambda b, i, j: (b, i, j))
+    out = jax.ShapeDtypeStruct((B, n, n), _ACC)
+    return pl.pallas_call(
+        _sbgemm_gram_kernel,
+        grid=grid,
+        in_specs=[spec_i, spec_j, spec_i, spec_j],
+        out_specs=[spec_G, spec_G],
+        out_shape=[out, out],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(A_re, A_re, A_im, A_im)
+
+
+# ---------------------------------------------------------------------------
 # Real variants
 # ---------------------------------------------------------------------------
 

@@ -102,18 +102,31 @@ def pcg(A: Callable, b, *, x0=None, tol: float = 1e-10, maxiter: int = 500,
 
 def cg_normal_equations(op, d_obs, *, damp: float = 0.0, tol: float = 1e-10,
                         maxiter: int = 500, M: Optional[Callable] = None,
-                        precision: SolverPrecision | str = SolverPrecision()
-                        ) -> SolveResult:
+                        precision: SolverPrecision | str = SolverPrecision(),
+                        gram=None) -> SolveResult:
     """CGNR: solve min ||F m - d||^2 + damp ||m||^2 via
     (F* F + damp I) m = F* d, with F an :class:`FFTMatvec`-like operator
     exposing ``matmat``/``rmatmat`` ((R, N_t, S) stacked SOTI layout, 2-D
     inputs treated as S = 1).  ``precision`` accepts the same string
-    forms as :func:`pcg` (incl. ``"auto"``)."""
+    forms as :func:`pcg` (incl. ``"auto"``).
+
+    The F*F inner product runs through the fused parameter-space
+    :class:`~repro.core.GramOperator` (one stage-graph pipeline per
+    iteration instead of a composed rmatmat/matmat pair) whenever ``op``
+    exposes ``.gram()``; pass ``gram`` to supply a prebuilt one (e.g. a
+    retuned or preconditioning variant).  Plain callable-pair operators
+    fall back to the composed product."""
     precision = resolve_precision(precision, tol)
     rec_dt = precision.recurrence_dtype()
 
-    def normal_op(v):
-        return op.rmatmat(op.matmat(v)) + damp * v
+    if gram is None and hasattr(op, "gram"):
+        gram = op.gram(space="parameter", mode="exact")
+    if gram is not None:
+        def normal_op(v):
+            return gram.apply(v) + damp * v
+    else:
+        def normal_op(v):
+            return op.rmatmat(op.matmat(v)) + damp * v
 
     rhs = op.rmatmat(d_obs).astype(rec_dt)
     return pcg(normal_op, rhs, tol=tol, maxiter=maxiter, M=M,

@@ -76,7 +76,7 @@ def default_input(op, variant: str = "matvec", *, n_rhs: int = 4,
     §4.2.1 — lossy at every sub-f64 level, so copy phases show true
     error) when x64 is on, plain normals otherwise."""
     rows = op.N_d if variant in _ADJOINT_VARIANTS else op.N_m
-    shape = (rows, op.N_t) if variant in ("matvec", "rmatvec") \
+    shape = (rows, op.N_t) if variant in ("matvec", "rmatvec", "gram") \
         else (rows, op.N_t, n_rhs)
     key = jax.random.PRNGKey(seed)
     if jax.config.jax_enable_x64:
@@ -98,7 +98,10 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
     ``op`` should be the *highest-precision* operator (its stored Fourier
     blocks are recast down per candidate; upcasting cannot restore lost
     bits).  ``ladder`` defaults to ("d","s") when the operator is
-    double-based, ("s","h") otherwise.  ``slack`` widens the model-prune
+    double-based, ("s","h") otherwise.  ``variant`` may also be ``"gram"``:
+    the fused parameter-space Gram pipeline (Hessian actions / CGNR's
+    F*F), pruned with its own eq.-(6) factors (doubled transform terms,
+    squared condition number — see ``core.error_model.phase_factors``).  ``slack`` widens the model-prune
     cutoff to absorb calibration error; every kept candidate is still
     rechecked against its *measured* error before selection, so slack
     only trades pruning aggressiveness, never correctness of the final
@@ -116,6 +119,7 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
         ladder = ("d", "s") if op.precision.highest() == "d" else ("s", "h")
     ladder = tuple(ladder)
     adjoint = variant in _ADJOINT_VARIANTS
+    model_variant = variant if variant == "gram" else None
     lattice = list(all_configs(ladder))
     top = max_level(ladder)
     base_cfg = PrecisionConfig(*([top] * 5))
@@ -178,12 +182,14 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
         for phase, lvl, cfg in probe_configs(ladder):
             probe_errs.setdefault(phase, {})[lvl] = error_of(cfg)
         constants = calibrate_constants(probe_errs, op.N_t, op.N_d, op.N_m,
-                                        p_r=p_r, p_c=p_c, adjoint=adjoint)
+                                        p_r=p_r, p_c=p_c, adjoint=adjoint,
+                                        variant=model_variant)
 
     # 3. model prune over the full lattice.
     report = prune_lattice(lattice, tol, op.N_t, op.N_d, op.N_m, p_r=p_r,
-                           p_c=p_c, adjoint=adjoint, kappa=kappa,
-                           input_level=top, constants=constants, slack=slack)
+                           p_c=p_c, adjoint=adjoint, variant=model_variant,
+                           kappa=kappa, input_level=top, constants=constants,
+                           slack=slack)
 
     # 4. frontier search: cheapest-first, dominated-by-measured-feasible
     #    skipped, measured error decides the rest.

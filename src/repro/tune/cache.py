@@ -30,7 +30,10 @@ from repro.core.pareto import ConfigRecord, optimal_config
 from repro.core.precision import PrecisionConfig
 
 CACHE_ENV = "REPRO_TUNE_CACHE"
-SCHEMA_VERSION = 1
+# v2: the key space gained the ``variant="gram"`` fused-pipeline family,
+# whose measurements are not comparable with v1 records tuned against the
+# matvec-era eq.-(6) factors — v1 entries read as misses and are re-tuned.
+SCHEMA_VERSION = 2
 
 
 def default_cache_path() -> pathlib.Path:

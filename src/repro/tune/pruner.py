@@ -52,6 +52,7 @@ def probe_configs(ladder: Sequence[str]) -> list[tuple[str, str, PrecisionConfig
 def calibrate_constants(probe_errors: Mapping[str, Mapping[str, float]],
                         N_t: int, N_d: int, N_m: int, *, p_r: int = 1,
                         p_c: int = 1, adjoint: bool = False,
+                        variant: str | None = None,
                         defaults: Mapping[str, float] | None = None
                         ) -> dict[str, float]:
     """Fit the eq.-(6) constants from single-phase probe errors.
@@ -70,7 +71,8 @@ def calibrate_constants(probe_errors: Mapping[str, Mapping[str, float]],
     c = {"c1": 1.0, "c2": 1.0, "c3": 1.0, "c4": 1.0, "c5": 1.0, "cF": 1.0}
     if defaults:
         c.update(defaults)
-    f = phase_factors(N_t, N_d, N_m, p_r, p_c, adjoint=adjoint)
+    f = phase_factors(N_t, N_d, N_m, p_r, p_c, adjoint=adjoint,
+                      variant=variant)
     for phase, name in PHASE_CONSTANTS.items():
         ratios = []
         for lvl, err in probe_errors.get(phase, {}).items():
@@ -100,8 +102,8 @@ class PruneReport:
 
 def prune_lattice(configs: Iterable[PrecisionConfig], tol: float, N_t: int,
                   N_d: int, N_m: int, *, p_r: int = 1, p_c: int = 1,
-                  adjoint: bool = False, kappa: float = 1.0,
-                  input_level: str = "d",
+                  adjoint: bool = False, variant: str | None = None,
+                  kappa: float = 1.0, input_level: str = "d",
                   constants: Mapping[str, float] | None = None,
                   slack: float = 1.0) -> PruneReport:
     """Prune a config lattice with eq. (6) alone (no measurements).
@@ -116,7 +118,7 @@ def prune_lattice(configs: Iterable[PrecisionConfig], tol: float, N_t: int,
     if not configs:
         raise ValueError("empty config lattice")
     bounds = lattice_bounds(configs, N_t, N_d, N_m, p_r=p_r, p_c=p_c,
-                            adjoint=adjoint, kappa=kappa,
+                            adjoint=adjoint, variant=variant, kappa=kappa,
                             input_level=input_level,
                             constants=dict(constants) if constants else None)
     cutoff = slack * tol

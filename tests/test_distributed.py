@@ -51,16 +51,25 @@ e3 = rel_l2(op.matmat(jax.device_put(M, op.m_sharding(stacked=True))),
             jnp.stack([dense_matvec(F_col, M[:, :, s]) for s in range(S)], axis=-1))
 e4 = rel_l2(op.rmatmat(jax.device_put(D, op.d_sharding(stacked=True))),
             jnp.stack([dense_rmatvec(F_col, D[:, :, s]) for s in range(S)], axis=-1))
+# fused Gram pipelines on the mesh (exact mode) vs composed dense references
+gp, gd = op.gram(space="parameter"), op.gram(space="data")
+e5 = rel_l2(gp.apply(jax.device_put(m, gp.v_sharding())),
+            dense_rmatvec(F_col, dense_matvec(F_col, m)))
+e6 = rel_l2(gd.apply(jax.device_put(D, gd.v_sharding(stacked=True))),
+            jnp.stack([dense_matvec(F_col, dense_rmatvec(F_col, D[:, :, s]))
+                       for s in range(S)], axis=-1))
 # collective structure of the F matvec: ONLY the phase-5 reduce
 lo = jax.jit(op.matvec, in_shardings=op.m_sharding()).lower(
     jax.ShapeDtypeStruct(m.shape, m.dtype)).compile()
 import re
 colls = sorted(set(re.findall(
     r'(all-reduce|all-gather|reduce-scatter|all-to-all)', lo.as_text())))
-print(json.dumps({"e1": e1, "e2": e2, "e3": e3, "e4": e4, "colls": colls}))
+print(json.dumps({"e1": e1, "e2": e2, "e3": e3, "e4": e4, "e5": e5,
+                  "e6": e6, "colls": colls}))
 """)
     assert res["e1"] < 1e-13 and res["e2"] < 1e-13
     assert res["e3"] < 1e-13 and res["e4"] < 1e-13
+    assert res["e5"] < 1e-12 and res["e6"] < 1e-12
     assert res["colls"] == ["all-reduce"]
 
 

@@ -110,6 +110,66 @@ def test_error_bound_monotone_in_precision(s):
         assert b_up <= b + 1e-30
 
 
+# sampled (d, s) precision-lattice configs for the adjoint/Gram identities;
+# mixed configs hold the identities only to the precision of their lowest
+# phase, so the tolerance splits on whether any phase runs below f64
+_CONFIGS = st.sampled_from([c.to_string() for c in all_configs(("d", "s"))])
+
+
+def _identity_tol(prec_string: str) -> float:
+    # all-f64 pipelines hold the identities to roundoff; once any phase
+    # runs at f32 the residual scales like kappa * eps_s * (n_m + log N_t)
+    # (~1e-4 at these sizes) — the loose branch still rejects the O(1)
+    # residuals a structural bug (wrong conjugation, dropped mask) produces
+    return 1e-12 if set(prec_string) == {"d"} else 5e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims, _CONFIGS, st.integers(1, 3), st.integers(0, 2 ** 31 - 1))
+def test_adjoint_identity_across_configs(d, prec_string, S, seed):
+    """<F m, d> == <m, F* d> (at f64 I/O) across sampled precision-lattice
+    configs and single/multi-RHS layouts."""
+    Nt, Nd, Nm = d
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    F_col = random_block_column(ks[0], Nt, Nd, Nm, dtype=jnp.float64)
+    op = FFTMatvec.from_block_column(
+        F_col, precision=PrecisionConfig.from_string(prec_string))
+    shape_m, shape_d = (Nm, Nt, S), (Nd, Nt, S)
+    M = jax.random.normal(ks[1], shape_m, jnp.float64)
+    D = jax.random.normal(ks[2], shape_d, jnp.float64)
+    if S == 1:
+        M, D = M[..., 0], D[..., 0]
+    FM = jnp.asarray(op.matmat(M), jnp.float64)
+    FtD = jnp.asarray(op.rmatmat(D), jnp.float64)
+    lhs, rhs = jnp.vdot(FM, D), jnp.vdot(M, FtD)
+    # normalize by the Cauchy-Schwarz scale, not the dots themselves — a
+    # near-orthogonal draw must not turn roundoff into a huge ratio
+    scale = max(float(jnp.linalg.norm(FM) * jnp.linalg.norm(D)),
+                float(jnp.linalg.norm(M) * jnp.linalg.norm(FtD)), 1e-30)
+    assert abs(float(lhs - rhs)) / scale < _identity_tol(prec_string)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims, _CONFIGS, st.integers(1, 3), st.integers(0, 2 ** 31 - 1))
+def test_gram_identity_across_configs(d, prec_string, S, seed):
+    """gram().apply(v) == rmatvec(matvec(v)) (at f64 I/O) across sampled
+    precision-lattice configs and single/multi-RHS layouts.  All-f64
+    configs agree to roundoff; mixed configs differ only where the
+    composed path's extra unpad/pad casts round differently from the
+    fused mask stage."""
+    Nt, Nd, Nm = d
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    F_col = random_block_column(ks[0], Nt, Nd, Nm, dtype=jnp.float64)
+    op = FFTMatvec.from_block_column(
+        F_col, precision=PrecisionConfig.from_string(prec_string))
+    V = jax.random.normal(ks[1], (Nm, Nt, S), jnp.float64)
+    if S == 1:
+        V = V[..., 0]
+    fused = op.gram(space="parameter").apply(V)
+    composed = op.rmatmat(op.matmat(V))
+    assert rel_l2(fused, composed) < _identity_tol(prec_string)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(2, 10), st.integers(1, 4), st.integers(1, 8),
        st.integers(0, 2 ** 31 - 1))

@@ -326,6 +326,35 @@ def test_cache_stale_entry_is_miss(tmp_path):
     assert res2.config == res.config
 
 
+def test_cache_v1_schema_entry_is_stale_and_migrates(tmp_path):
+    """Schema-v1 entries (written before the ``variant="gram"`` key space
+    existed) must read as misses, and a re-tune must overwrite them in
+    place with current-version records."""
+    from repro.tune.cache import SCHEMA_VERSION
+    assert SCHEMA_VERSION == 2
+    path = tmp_path / "tune.json"
+    op, _, m = small_problem()
+    res = autotune(op, tol=3e-6, v=m, ladder=("d", "s"), timer=fake_timer,
+                   cache_path=path)
+    key = res.cache_key
+    data = json.loads(path.read_text())
+    v1_entry = dict(data[key.to_string()], version=1)   # as PR 2 wrote it
+    path.write_text(json.dumps({key.to_string(): v1_entry}))
+
+    cache = TuningCache(path)
+    assert cache.get(key) is None                       # stale -> miss
+    res2 = autotune(op, tol=3e-6, v=m, ladder=("d", "s"), timer=fake_timer,
+                    cache=cache)
+    assert not res2.from_cache
+    assert res2.config == res.config
+    stored = json.loads(path.read_text())[key.to_string()]
+    assert stored["version"] == SCHEMA_VERSION          # migrated in place
+    # and the migrated entry now answers
+    res3 = autotune(op, tol=3e-6, v=m, ladder=("d", "s"), timer=fake_timer,
+                    cache=TuningCache(path))
+    assert res3.from_cache
+
+
 def test_cache_key_identity():
     k1 = CacheKey(128, 25, 625, ("d", "s"), "matvec", "cpu:")
     k2 = CacheKey(128, 25, 625, ("d", "s"), "rmatvec", "cpu:")
