@@ -15,20 +15,24 @@ Derived column: achieved GB/s (CPU) and the modeled TPU bandwidth-bound
 time at 819 GB/s HBM for the optimized traffic.
 """
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backend import TPU_PALLAS, DispatchTable
 from repro.kernels import ops, ref
 from .common import row, time_fn
 
-HBM_BW = 819e9
+HBM_BW = TPU_PALLAS.hbm_bandwidth   # modeled TPU target (backend spec)
 
 CASES = [
     # (m, n, dtype_name)  — paper: skews 1:64 .. 1:1, light vs heavy dtypes
     (16, 4096, "c32"), (64, 4096, "c32"), (100, 5000, "c32"),
     (256, 4096, "c32"), (100, 5000, "c64"), (64, 4096, "r32"),
 ]
+SMOKE_CASES = [(16, 512, "c32"), (16, 512, "r32")]
 BATCH = 32   # paper uses 100; reduced for CPU
 
 
@@ -58,9 +62,13 @@ def _fused_pass(Ar, Ai, xr, xi):
     return R[:, 0] + I[:, 1], R[:, 1] - I[:, 0]
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CPU shapes for the CI smoke job")
+    args = ap.parse_args(argv)
     key = jax.random.PRNGKey(0)
-    for m, n, dname in CASES:
+    for m, n, dname in (SMOKE_CASES if args.smoke else CASES):
         (Ar, Ai), (xr, xi), dt = _mk(m, n, dname, key)
         if dname.startswith("r"):
             base = jax.jit(lambda A, x: ref.sbgemv_real_ref(A, x, "T"))
@@ -80,8 +88,8 @@ def main():
             f"tpu_bound_us={traffic_fused / BATCH / HBM_BW * 1e6:.1f}")
         # Pallas kernel correctness at this shape (interpret, f32 planes)
         if dt == jnp.float32:
-            got = ops.sbgemv(Ar, Ai, xr, xi, "H", use_pallas=True,
-                             interpret=True, block_n=512)
+            got = ops.sbgemv(Ar, Ai, xr, xi, "H", backend="cpu-interpret",
+                             dispatch=DispatchTable(force="pallas"))
             want = ref.sbgemv_complex_ref(Ar, Ai, xr, xi, "H")
             err = max(float(jnp.max(jnp.abs(g - w)))
                       for g, w in zip(got, want))

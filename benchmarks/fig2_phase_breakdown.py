@@ -6,6 +6,8 @@ Runs F and F* matvecs at a CPU-feasible slice of the paper's problem
 SBGEMV dominates (~92%) — the derived column reports each phase's share.
 """
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 
@@ -13,19 +15,18 @@ from repro.core import FFTMatvec, PrecisionConfig, phase_callables, random_block
 from .common import row, time_fn
 
 N_T, N_D, N_M = 256, 50, 1250   # paper/4 in each dim (CPU)
+SMOKE = (32, 4, 48)
 
 
-def bench(adjoint: bool):
+def bench(adjoint: bool, dims=(N_T, N_D, N_M)):
+    N_T_, N_D_, N_M_ = dims
     key = jax.random.PRNGKey(0)
-    F_col = random_block_column(key, N_T, N_D, N_M, dtype=jnp.float64)
+    F_col = random_block_column(key, N_T_, N_D_, N_M_, dtype=jnp.float64)
     op = FFTMatvec.from_block_column(F_col)
     fns = phase_callables(op, adjoint=adjoint)
-    if adjoint:
-        v = jax.random.normal(jax.random.PRNGKey(1), (N_D, N_T),
-                              dtype=jnp.float64)
-    else:
-        v = jax.random.normal(jax.random.PRNGKey(1), (N_M, N_T),
-                              dtype=jnp.float64)
+    rows = N_D_ if adjoint else N_M_
+    v = jax.random.normal(jax.random.PRNGKey(1), (rows, N_T_),
+                          dtype=jnp.float64)
     # run the chain once to build phase inputs
     inputs = {"pad": v}
     order = ["pad", "fft", "gemv", "ifft", "reduce"]
@@ -43,12 +44,17 @@ def bench(adjoint: bool):
     for ph in order:
         row(f"fig2/{name}_{ph}", times[ph],
             f"share={times[ph] / total * 100:.1f}%")
-    row(f"fig2/{name}_total", total, f"Nt={N_T};Nd={N_D};Nm={N_M}")
+    row(f"fig2/{name}_total", total, f"Nt={N_T_};Nd={N_D_};Nm={N_M_}")
 
 
-def main():
-    bench(adjoint=False)
-    bench(adjoint=True)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CPU shapes for the CI smoke job")
+    args = ap.parse_args(argv)
+    dims = SMOKE if args.smoke else (N_T, N_D, N_M)
+    bench(adjoint=False, dims=dims)
+    bench(adjoint=True, dims=dims)
 
 
 if __name__ == "__main__":

@@ -11,6 +11,8 @@ is also reported with tolerance 1e-2.  Each ladder row reports how much
 of the lattice the error-model-guided pruner actually timed.
 """
 
+import argparse
+
 import jax
 import numpy as np
 
@@ -19,12 +21,14 @@ from repro.tune import autotune
 from .common import row
 
 N_T, N_D, N_M = 128, 25, 625
+SMOKE = (16, 3, 24)
 
 
-def run_ladder(levels, tol, tag):
+def run_ladder(levels, tol, tag, dims=(N_T, N_D, N_M)):
+    n_t, n_d, n_m = dims
     key = jax.random.PRNGKey(0)
-    F_col = random_unrepresentable(key, (N_T, N_D, N_M)) / np.sqrt(N_M)
-    m = random_unrepresentable(jax.random.PRNGKey(1), (N_M, N_T))
+    F_col = random_unrepresentable(key, (n_t, n_d, n_m)) / np.sqrt(n_m)
+    m = random_unrepresentable(jax.random.PRNGKey(1), (n_m, n_t))
     op = FFTMatvec.from_block_column(F_col)
     res = autotune(op, tol=tol, v=m, ladder=levels, repeats=3)
     front_ids = {id(r) for r in res.front}
@@ -39,13 +43,19 @@ def run_ladder(levels, tol, tag):
     return res
 
 
-def main():
-    res_ds = run_ladder(("d", "s"), 1e-7, "paper_f64f32")
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CPU shapes for the CI smoke job")
+    args = ap.parse_args(argv)
+    dims = SMOKE if args.smoke else (N_T, N_D, N_M)
+    res_ds = run_ladder(("d", "s"), 1e-7, "paper_f64f32", dims=dims)
     # paper result: the optimal config keeps only the tolerance-critical
     # phases in double; its measured error must respect the tolerance
     assert res_ds.record.rel_error <= 1e-7
-    assert res_ds.n_timed < res_ds.n_lattice // 2   # pruning did its job
-    run_ladder(("s", "h"), 1e-2, "tpu_f32bf16")
+    if not args.smoke:   # pruning ratio only meaningful at figure scale
+        assert res_ds.n_timed < res_ds.n_lattice // 2
+    run_ladder(("s", "h"), 1e-2, "tpu_f32bf16", dims=dims)
 
 
 if __name__ == "__main__":

@@ -12,33 +12,34 @@ Two parts:
      at 4,096 GPUs and a ~30% mixed-precision speedup at 640 GPUs.
 """
 
+import argparse
 import json
 import os
 import subprocess
 import sys
 
+from repro.backend import TPU_PALLAS
 from repro.core import NetworkModel, choose_grid, matvec_comm_time, paper_grid
 from .common import row
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # per-device compute time for the local slice (5000 cols), from the fig2
-# bench scaled: memory-bound SBGEMV traffic / HBM bw; here use the TPU
-# model: local F_hat slice = (Nt+1) * Nd * 5000 * 8B / 819 GB/s
+# bench scaled: memory-bound SBGEMV traffic / HBM bw of the TPU target
+# backend spec: local F_hat slice = (Nt+1) * Nd * 5000 * 8B / hbm_bw
 N_T, N_D, NM_PER = 1000, 100, 5000
-T_COMPUTE = (N_T + 1) * N_D * NM_PER * 8 / 819e9          # f64 baseline
-T_COMPUTE_MIXED = (N_T + 1) * N_D * NM_PER * 4 / 819e9    # f32 gemv phase
+_HBM = TPU_PALLAS.hbm_bandwidth
+T_COMPUTE = (N_T + 1) * N_D * NM_PER * 8 / _HBM          # f64 baseline
+T_COMPUTE_MIXED = (N_T + 1) * N_D * NM_PER * 4 / _HBM    # f32 gemv phase
 
-
-def measured_8dev():
-    code = r"""
+_MEASURED_CODE = r"""
 import jax, json
 jax.config.update("jax_enable_x64", True)
-import jax.numpy as jnp, time, re
+import jax.numpy as jnp, time
 from repro.core import FFTMatvec, PrecisionConfig, random_block_column, rel_l2, dense_matvec
 from repro.jax_compat import make_mesh
 mesh = make_mesh((1, 8), ("row", "col"))
-Nt, Nd, Nm = 128, 16, 8 * 200
+Nt, Nd, Nm = %(shape)s
 F_col = random_block_column(jax.random.PRNGKey(0), Nt, Nd, Nm, dtype=jnp.float64)
 m = jax.random.normal(jax.random.PRNGKey(1), (Nm, Nt), dtype=jnp.float64)
 res = {}
@@ -55,13 +56,19 @@ for tag, prec in [("f64", "ddddd"), ("mixed", "dssdd")]:
                 "err": rel_l2(out, dense_matvec(F_col, m))}
 print(json.dumps(res))
 """
+
+
+def measured_8dev(results, smoke=False):
+    shape = (32, 4, 8 * 32) if smoke else (128, 16, 8 * 200)
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=560)
+    out = subprocess.run(
+        [sys.executable, "-c", _MEASURED_CODE % {"shape": repr(shape)}],
+        env=env, capture_output=True, text=True, timeout=560)
     if out.returncode != 0:
         row("fig4/measured_8dev", 0.0, f"FAILED:{out.stderr[-120:]}")
+        results["measured_8dev"] = {"error": out.stderr[-400:]}
         return
     res = json.loads(out.stdout.splitlines()[-1])
     row("fig4/measured_8dev_f64", res["f64"]["t"],
@@ -69,11 +76,12 @@ print(json.dumps(res))
     row("fig4/measured_8dev_mixed", res["mixed"]["t"],
         f"rel_err={res['mixed']['err']:.1e};"
         f"speedup={res['f64']['t'] / res['mixed']['t']:.2f}")
+    results["measured_8dev"] = {"shape": list(shape), **res}
 
 
-def modeled_scaling():
+def modeled_scaling(results, smoke=False):
     net = NetworkModel()
-    for p in (8, 64, 512, 1024, 2048, 4096):
+    for p in (8, 64) if smoke else (8, 64, 512, 1024, 2048, 4096):
         Nm = NM_PER * p
         grid = choose_grid(p, N_T, N_D, Nm, net=net)
         t_flat = matvec_comm_time(1, p, N_T, N_D, Nm, net=net)
@@ -85,11 +93,26 @@ def modeled_scaling():
             f"{(T_COMPUTE + t_flat) / total_f64:.2f};"
             f"comm_only_speedup={t_flat / max(t_grid, 1e-12):.2f};"
             f"mixed_speedup={total_f64 / total_mix:.2f}")
+        results["model"][f"p{p}"] = {
+            "grid": list(grid), "time_s": total_mix,
+            "comm_aware_speedup": (T_COMPUTE + t_flat) / total_f64,
+            "mixed_speedup": total_f64 / total_mix,
+        }
 
 
-def main():
-    measured_8dev()
-    modeled_scaling()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CPU shapes for the CI smoke job")
+    ap.add_argument("--out", default="BENCH_fig4.json",
+                    help="JSON artifact path")
+    args = ap.parse_args(argv)
+    results = {"smoke": bool(args.smoke), "model": {}}
+    measured_8dev(results, smoke=args.smoke)
+    modeled_scaling(results, smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    print(f"# wrote {args.out}")
 
 
 if __name__ == "__main__":

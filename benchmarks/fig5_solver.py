@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import solvers
-from repro.core import FFTMatvec, MatvecOptions, PrecisionConfig, random_block_column
+from repro.core import FFTMatvec, PrecisionConfig, random_block_column
 from .common import row, time_fn
 
 N_T, N_D, N_M = 64, 8, 256
@@ -42,8 +42,7 @@ def main(argv=None):
     key = jax.random.PRNGKey(0)
     F_col = random_block_column(key, n_t, n_d, n_m, dtype=jnp.float32)
     op = FFTMatvec.from_block_column(
-        F_col, precision=PrecisionConfig.from_string("sssss"),
-        opts=MatvecOptions(use_pallas=False))
+        F_col, precision=PrecisionConfig.from_string("sssss"))
     matvec, _ = op.jitted()
     matmat, _ = op.jitted_block()
 

@@ -24,7 +24,7 @@ import json
 import jax
 import jax.numpy as jnp
 
-from repro.core import (FFTMatvec, GaussianInverseProblem, MatvecOptions,
+from repro.core import (FFTMatvec, GaussianInverseProblem,
                         PrecisionConfig, random_block_column, rel_l2)
 from .common import row, time_fn
 
@@ -46,8 +46,7 @@ def main(argv=None):
     key = jax.random.PRNGKey(0)
     F_col = random_block_column(key, N_t, N_d, N_m, dtype=jnp.float32)
     op = FFTMatvec.from_block_column(
-        F_col, precision=PrecisionConfig.from_string("sssss"),
-        opts=MatvecOptions(use_pallas=False))
+        F_col, precision=PrecisionConfig.from_string("sssss"))
     gram = op.gram(space="data", mode="exact")
     gram_circ = op.gram(space="data", mode="circulant")
 

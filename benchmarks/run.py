@@ -1,8 +1,12 @@
-"""Benchmark harness: one bench per paper table/figure.
+"""Benchmark harness: one bench per paper table/figure, one registry.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,fig5] [--smoke]
 
-Prints ``name,us_per_call,derived`` CSV.  Figures map to the paper:
+Prints ``name,us_per_call,derived`` CSV.  Every bench exposes
+``main(argv)`` with a ``--smoke`` flag (tiny CPU shapes for the CI smoke
+job); ``--only`` selects a comma-separated subset by registry name and
+extra flags pass through to each selected bench.  Figures map to the
+paper:
   fig1  optimized short-wide (conj) transpose SBGEMV vs stock   (Fig. 1)
   fig2  FFTMatvec per-phase runtime breakdown, F and F*         (Fig. 2)
   fig3  mixed-precision Pareto front, 32 configs, tol 1e-7      (Fig. 3)
@@ -13,21 +17,46 @@ TPU-target roofline numbers live in benchmarks/roofline_report (reads the
 dry-run artifacts; EXPERIMENTS.md §Roofline).
 """
 
+import argparse
+
 import jax
 
 jax.config.update("jax_enable_x64", True)   # paper-faithful f64 ladder
 
 
-def main() -> None:
-    print("name,us_per_call,derived")
+def _registry():
     from . import (fig1_sbgemv, fig2_phase_breakdown, fig3_pareto,
                    fig4_scaling, fig5_solver, hessian_gram)
-    fig1_sbgemv.main()
-    fig2_phase_breakdown.main()
-    fig3_pareto.main()
-    fig4_scaling.main()
-    fig5_solver.main([])
-    hessian_gram.main([])
+    return {
+        "fig1": fig1_sbgemv.main,
+        "fig2": fig2_phase_breakdown.main,
+        "fig3": fig3_pareto.main,
+        "fig4": fig4_scaling.main,
+        "fig5": fig5_solver.main,
+        "hessian": hessian_gram.main,
+    }
+
+
+def main(argv=None) -> None:
+    benches = _registry()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="",
+                    help=f"comma-separated subset of {sorted(benches)}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CPU shapes for the CI smoke job")
+    args, passthrough = ap.parse_known_args(argv)
+
+    selected = [s for s in args.only.split(",") if s] or list(benches)
+    unknown = [s for s in selected if s not in benches]
+    if unknown:
+        ap.error(f"unknown bench(es) {unknown}; known: {sorted(benches)}")
+    if passthrough and len(selected) != 1:
+        ap.error(f"extra flags {passthrough} need --only <one bench>")
+
+    print("name,us_per_call,derived")
+    child_argv = (["--smoke"] if args.smoke else []) + passthrough
+    for name in selected:
+        benches[name](list(child_argv))
 
 
 if __name__ == "__main__":

@@ -11,7 +11,8 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import (FFTMatvec, MatvecOptions, PrecisionConfig,  # noqa: E402
+from repro.backend import DispatchTable, current_backend  # noqa: E402
+from repro.core import (ExecOpts, FFTMatvec, PrecisionConfig,  # noqa: E402
                         dense_matvec, random_block_column, rel_l2)
 
 
@@ -21,6 +22,8 @@ def main():
     F_col = random_block_column(key, N_t, N_d, N_m, dtype=jnp.float64)
     m = jax.random.normal(jax.random.PRNGKey(1), (N_m, N_t), jnp.float64)
 
+    print(f"backend: {current_backend().fingerprint()} "
+          f"(override with REPRO_BACKEND=xla-ref|cpu-interpret|...)")
     print(f"p2o operator: N_t={N_t}, N_d={N_d}, N_m={N_m} "
           f"(matrix is {N_t * N_d} x {N_t * N_m}, stored as {F_col.shape})")
 
@@ -38,11 +41,19 @@ def main():
     rhs = jnp.vdot(m, op.rmatvec(d))
     print(f"adjoint check: <Fm,d>={lhs:.6f} <m,F*d>={rhs:.6f}")
 
-    # the custom Pallas kernel path (validated in interpret mode on CPU)
+    # the custom Pallas kernel path (validated in interpret mode on CPU):
+    # select the cpu-interpret backend and force the kernel past the
+    # dispatch table's short-wide transition point
     op_k = FFTMatvec.from_block_column(
         F_col, precision=PrecisionConfig.from_string("sssss"),
-        opts=MatvecOptions(use_pallas=True, interpret=True, fuse_pad_cast=True))
+        opts=ExecOpts(backend="cpu-interpret",
+                      dispatch=DispatchTable(force="pallas"),
+                      fuse_pad_cast=True))
     print(f"pallas kernel path rel_err={rel_l2(op_k.matvec(m), ref):.3e}")
+
+    # the forced reference backend (numerical ground truth, CI parity leg)
+    op_r = FFTMatvec.from_block_column(F_col, backend="xla-ref")
+    print(f"xla-ref backend  rel_err={rel_l2(op_r.matvec(m), ref):.3e}")
 
 
 if __name__ == "__main__":

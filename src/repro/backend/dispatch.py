@@ -1,0 +1,244 @@
+"""The calibrated dispatch table: shape -> kernel path, per backend.
+
+This generalizes the paper's rocBLAS *host dispatcher*: the optimized
+short-wide kernel was spliced into the rocBLAS dispatch function with
+transition points set from benchmarking, so application code never chose
+a kernel.  Here :class:`DispatchTable` owns those transition points —
+the short-wide ratio that flips the SBGEMV/SBGEMM between the custom
+Pallas kernel and the XLA lowering, and the minor-axis cutover for the
+fused pad+cast kernels — and every ``kernels.ops`` entry point consults
+one instead of reading per-call flags.
+
+Tables start from the built-in defaults (the constants the repo always
+used) and can be *calibrated*: :func:`calibrate_dispatch` times both
+sides of each transition on the live backend (through the same
+``time_callable`` the tuner uses) and bisects the crossover.  Calibrated
+tables round-trip through :class:`repro.tune.TuningCache` keyed by the
+backend fingerprint, so tomorrow's process on the same hardware reuses
+today's transition points.
+
+Explicit-vs-auto contract: ``force="pallas"`` *demands* the custom
+kernel and raises :class:`UnsupportedOnBackend` when the backend cannot
+run it (no Pallas, or f64 data on an f64-less Pallas); automatic
+dispatch (``force=None``) silently picks a supported path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax.numpy as jnp
+
+from .spec import BackendSpec, UnsupportedOnBackend
+
+_PATHS = ("pallas", "xla", "ref")
+
+# Default transition points (the constants formerly hardcoded at call
+# sites: ops.SHORT_WIDE_RATIO = 4; pad-cast fusion had no cutover).
+DEFAULT_SHORT_WIDE_RATIO = 4.0
+DEFAULT_PAD_CAST_MIN_COLS = 0
+
+
+def _is_f64(*dtypes) -> bool:
+    return any(jnp.dtype(dt) == jnp.float64 for dt in dtypes)
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchTable:
+    """Per-op transition points + an optional forced path.
+
+    ``short_wide_ratio``   SBGEMV/SBGEMM goes to the custom kernel when
+                           ``m * ratio <= n`` (m rows, n cols per block).
+    ``pad_cast_min_cols``  fused Pallas pad+cast only pays off beyond
+                           this minor-axis length.
+    ``force``              None (auto) or one of "pallas"/"xla"/"ref" —
+                           the legacy ``use_pallas=``/``xla_fused=``
+                           kwargs map onto this.
+    ``calibrated``         True when the transition points came from
+                           measurements rather than the defaults.
+    """
+
+    short_wide_ratio: float = DEFAULT_SHORT_WIDE_RATIO
+    pad_cast_min_cols: int = DEFAULT_PAD_CAST_MIN_COLS
+    force: Optional[str] = None
+    calibrated: bool = False
+
+    def __post_init__(self):
+        if self.force is not None and self.force not in _PATHS:
+            raise ValueError(f"force must be one of {_PATHS}, "
+                             f"got {self.force!r}")
+
+    # -- per-op choices ------------------------------------------------------
+    def gemv_path(self, m: int, n: int, mode: str, dtype,
+                  spec: BackendSpec) -> str:
+        """Path for a (B, m, n) SBGEMV/SBGEMM block: "pallas"/"xla"/"ref".
+
+        Explicit ``force="pallas"`` raises :class:`UnsupportedOnBackend`
+        when the backend cannot satisfy it; auto mode falls back.
+        """
+        if self.force == "pallas":
+            # the explicit demand is validated BEFORE the reference
+            # override: a forced kernel the backend cannot run must never
+            # silently report success through another lowering
+            if not spec.pallas:
+                raise UnsupportedOnBackend(
+                    f"Pallas kernels were explicitly requested but backend "
+                    f"{spec.fingerprint()!r} has none; drop the explicit "
+                    f"request (auto dispatch falls back to XLA) or select a "
+                    f"Pallas-capable backend")
+            if not spec.pallas_supports(dtype):
+                raise UnsupportedOnBackend(
+                    f"f64 SBGEMV/SBGEMM was explicitly forced onto the "
+                    f"Pallas path, but backend {spec.fingerprint()!r} has no "
+                    f"f64 Pallas datapath; drop the explicit request (auto "
+                    f"dispatch falls back to XLA) or run the paper ladder "
+                    f"on an f64-capable backend")
+            return "pallas"
+        if spec.reference or self.force == "ref":
+            return "ref"
+        if self.force == "xla":
+            return "xla"
+        # auto: the benchmarking-derived transition point
+        if (spec.pallas_supports(dtype) and mode in ("N", "T", "H")
+                and m * self.short_wide_ratio <= n):
+            return "pallas"
+        return "xla"
+
+    def fuse_pad_cast(self, n_cols: int, dtype_in, dtype_out,
+                      spec: BackendSpec,
+                      prefer: Optional[bool] = None) -> bool:
+        """Whether the Phase-1/5 pad/unpad runs through the fused Pallas
+        pad+cast kernel.  ``prefer`` pins the answer where supported
+        (stage-level preference — f64 still falls back: this is a memory
+        op, never worth an error); None consults the cutover."""
+        if spec.reference or not spec.pallas_supports(dtype_in, dtype_out):
+            return False
+        if prefer is not None:
+            return bool(prefer)
+        # interpret-mode Pallas is a validation vehicle, not a win: fuse
+        # only when explicitly preferred
+        if spec.pallas_interpret:
+            return False
+        return n_cols >= self.pad_cast_min_cols
+
+    def for_dtype(self, dtype, spec: BackendSpec) -> "DispatchTable":
+        """Stage-level view: a forced-Pallas table relaxes to auto for a
+        *dtype* the backend's Pallas cannot run.  The mixed-precision
+        pipeline uses this — ``force="pallas"`` there means "prefer the
+        custom kernels", and a d-level stage on TPU must keep running
+        (via XLA) exactly as the paper's f64 phases do.  Only the dtype
+        capability relaxes: on a backend with no Pallas at all the force
+        survives and the kernel layer raises
+        :class:`UnsupportedOnBackend` — a forced-Pallas pipeline on
+        ``cpu-xla``/``xla-ref`` is a caller error, never a silent
+        XLA run."""
+        if self.force == "pallas" and spec.pallas \
+                and not spec.pallas_supports(dtype):
+            return dataclasses.replace(self, force=None)
+        return self
+
+    # -- identity / persistence ---------------------------------------------
+    def describe(self) -> str:
+        """Compact identity string for tuning-cache key details."""
+        force = self.force or "auto"
+        cal = "cal" if self.calibrated else "def"
+        return (f"{force};swr={self.short_wide_ratio:g};"
+                f"pcc={self.pad_cast_min_cols};{cal}")
+
+    def to_dict(self) -> dict:
+        return {"short_wide_ratio": float(self.short_wide_ratio),
+                "pad_cast_min_cols": int(self.pad_cast_min_cols),
+                "force": self.force,
+                "calibrated": bool(self.calibrated)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DispatchTable":
+        return cls(short_wide_ratio=float(d["short_wide_ratio"]),
+                   pad_cast_min_cols=int(d["pad_cast_min_cols"]),
+                   force=d.get("force"),
+                   calibrated=bool(d.get("calibrated", False)))
+
+
+def default_table(spec: BackendSpec) -> DispatchTable:
+    """The uncalibrated table for a spec (reference backends force the
+    oracle path so even the shape heuristic cannot route around them)."""
+    if spec.reference:
+        return DispatchTable(force="ref")
+    return DispatchTable()
+
+
+# ---------------------------------------------------------------------------
+# Calibration: measure both sides of each transition, bisect the crossover.
+# ---------------------------------------------------------------------------
+
+def _default_gemv_measure(spec: BackendSpec):
+    """Time one jitted SBGEMV application per (path, m, n) on the live
+    backend.  Deferred imports: kernels.ops consults this module."""
+    import jax
+    from repro.core.timing import time_callable
+    from repro.kernels import ops as kops
+
+    def measure(path: str, m: int, n: int) -> float:
+        B = 8
+        k = jax.random.PRNGKey(0)
+        ks = jax.random.split(k, 4)
+        Ar, Ai = (jax.random.normal(kk, (B, m, n), jnp.float32)
+                  for kk in ks[:2])
+        xr, xi = (jax.random.normal(kk, (B, m), jnp.float32)
+                  for kk in ks[2:])
+        table = DispatchTable(force=path)
+        fn = jax.jit(lambda a, b, c, d: kops.sbgemv(
+            a, b, c, d, "H", backend=spec, dispatch=table))
+        return time_callable(lambda _: fn(Ar, Ai, xr, xi), None,
+                             repeats=3, warmup=1)
+
+    return measure
+
+
+def calibrate_short_wide_ratio(
+        spec: BackendSpec, *,
+        measure: Optional[Callable[[str, int, int], float]] = None,
+        m: int = 16,
+        ratios: Sequence[float] = (1, 2, 4, 8, 16, 32, 64)) -> float:
+    """Find the smallest skew ratio at which the custom kernel wins.
+
+    ``measure(path, m, n) -> seconds`` is injectable (the tests drive a
+    deterministic cost model through the same code path the real timing
+    uses).  Returns the first ratio from which Pallas stays ahead for
+    every wider shape probed; if it never wins, the ratio is infinite so
+    auto dispatch keeps choosing XLA at every skew.
+    """
+    if not spec.pallas:
+        return float("inf")              # custom kernel can never run
+    measure = measure or _default_gemv_measure(spec)
+    wins = [measure("pallas", m, int(m * r)) < measure("xla", m, int(m * r))
+            for r in ratios]
+    for i, r in enumerate(ratios):
+        if all(wins[i:]):
+            return float(r)
+    return float("inf")
+
+
+def calibrate_dispatch(
+        spec: BackendSpec, *,
+        measure: Optional[Callable[[str, int, int], float]] = None,
+        cache=None) -> DispatchTable:
+    """Benchmark-derived transition points for ``spec``, rocBLAS-style.
+
+    When ``cache`` (a :class:`repro.tune.TuningCache`) is given, a table
+    previously calibrated for the same backend fingerprint is returned
+    without re-measuring, and a fresh calibration is persisted for the
+    next process.
+    """
+    if cache is not None:
+        cached = cache.get_dispatch(spec)
+        if cached is not None:
+            return cached
+    table = DispatchTable(
+        short_wide_ratio=calibrate_short_wide_ratio(spec, measure=measure),
+        calibrated=True)
+    if cache is not None:
+        cache.put_dispatch(spec, table)
+        cache.save()
+    return table

@@ -1,0 +1,117 @@
+"""Hardware capability descriptions: the queryable side of portability.
+
+The paper's portability story is hipify + a rocBLAS host dispatcher whose
+transition points were set per-GPU by benchmarking — the *application*
+never learns which kernel ran.  Ginkgo's HIP port and the tile-centric
+mixed-precision GEMM line of work make the same argument: what a backend
+can do (datatypes, tile alignments, peak rates) belongs in one hardware
+description that kernel selection *queries*, not in per-call-site flags.
+
+:class:`BackendSpec` is that description for this repo: a frozen,
+hashable record of one execution backend — platform, Pallas
+availability, whether f64 survives inside Pallas kernels, tile/padding
+alignments, roofline peaks, and default block sizes.  Specs are *static
+capability tables*; the probing that picks one for the current process
+lives in :mod:`repro.backend.registry`, and the shape-dependent kernel
+choice on top of a spec lives in :mod:`repro.backend.dispatch`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+class UnsupportedOnBackend(TypeError):
+    """An *explicitly requested* kernel path cannot run on this backend.
+
+    Raised only for explicit requests (``force="pallas"`` dispatch, the
+    legacy ``use_pallas=True``); automatic dispatch never raises — it
+    falls back to a supported path instead.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Capabilities of one execution backend.
+
+    ``platform``/``device_kind`` identify the hardware ("" = filled in
+    from the probed device, see ``registry.resolve_backend``).  ``pallas``
+    says the Pallas kernels can run at all; ``pallas_interpret`` that they
+    run in interpret mode (CPU validation); ``pallas_f64`` that f64 data
+    survives *inside* Pallas kernels (false on TPU — no f64 datapath).
+    ``reference`` forces the pure-jnp oracle lowerings (``kernels.ref``),
+    bypassing both Pallas and the traffic-fused XLA formulations — the
+    numerical ground truth every other backend is compared against.
+
+    ``sublane``/``lane`` are the padding alignments the kernel wrappers
+    must honor; ``peak_flops``/``hbm_bandwidth``/``link_bandwidth`` feed
+    the roofline model (``launch.roofline``); ``default_block_n``/
+    ``default_block_s`` seed the dispatch table's tile sizes.
+    """
+
+    name: str
+    platform: str = ""
+    device_kind: str = ""
+    pallas: bool = False
+    pallas_interpret: bool = False
+    pallas_f64: bool = False
+    reference: bool = False
+    sublane: int = 8
+    lane: int = 128
+    default_block_n: int = 512
+    default_block_s: int = 128
+    peak_flops: float = 0.0          # FLOP/s, native matmul precision
+    hbm_bandwidth: float = 0.0       # B/s per device
+    link_bandwidth: float = 0.0      # B/s per interconnect link
+
+    def fingerprint(self) -> str:
+        """Stable identity for cache keys: backend + hardware it bound to."""
+        return f"{self.name}@{self.platform}:{self.device_kind}"
+
+    def pallas_supports(self, *dtypes) -> bool:
+        """Whether the Pallas kernels can consume these dtypes here."""
+        if not self.pallas:
+            return False
+        if any(jnp.dtype(dt) == jnp.float64 for dt in dtypes):
+            return self.pallas_f64
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Built-in specs.  Roofline peaks: TPU v5e-class (matches the dry-run
+# constants this repo has always modeled against); GPU numbers are
+# MI300X-class, the paper's newest target.  CPU peaks are order-of-
+# magnitude placeholders — CPU runs are validation, never the roofline.
+# ---------------------------------------------------------------------------
+
+TPU_PALLAS = BackendSpec(
+    name="tpu-pallas", platform="tpu", pallas=True, pallas_f64=False,
+    peak_flops=197e12, hbm_bandwidth=819e9, link_bandwidth=50e9)
+
+# pallas=False: the SBGEMV/SBGEMM kernels lower through the TPU Mosaic
+# pipeline (kernels/_compat.py builds pltpu CompilerParams) and do not
+# run on the Triton backend yet — GPU auto-dispatch takes the traffic-
+# fused XLA path; flip this when a GPU build of the kernels lands.
+GPU_PALLAS = BackendSpec(
+    name="gpu-pallas", platform="gpu", pallas=False, pallas_f64=False,
+    peak_flops=1307e12, hbm_bandwidth=5300e9, link_bandwidth=64e9)
+
+CPU_XLA = BackendSpec(
+    name="cpu-xla", platform="cpu", pallas=False,
+    peak_flops=1e12, hbm_bandwidth=100e9, link_bandwidth=25e9)
+
+# CPU validation backend: the Pallas kernels via the interpreter.  Slow by
+# construction — never auto-probed; select it explicitly (tests, examples).
+CPU_INTERPRET = dataclasses.replace(
+    CPU_XLA, name="cpu-interpret", pallas=True, pallas_interpret=True)
+
+# Forced reference backend: oracle lowerings on whatever hardware is under
+# us (platform filled at resolve time).  CI's numerical-parity leg.
+XLA_REF = BackendSpec(
+    name="xla-ref", platform="", reference=True,
+    peak_flops=1e12, hbm_bandwidth=100e9, link_bandwidth=25e9)
+
+BUILTIN_SPECS = {s.name: s for s in
+                 (TPU_PALLAS, GPU_PALLAS, CPU_XLA, CPU_INTERPRET, XLA_REF)}

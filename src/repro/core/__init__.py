@@ -1,7 +1,8 @@
 """Core FFTMatvec library — the paper's contribution as composable JAX modules.
 
 Public API:
-    PrecisionConfig, MatvecOptions, FFTMatvec  — mixed-precision matvec (C1+C3)
+    PrecisionConfig, ExecOpts, FFTMatvec       — mixed-precision matvec (C1+C3)
+                                                 (MatvecOptions = legacy shim)
     pipeline.Stage / matvec_plan / gram_plan   — stage graph + shared executor
     GramOperator (FFTMatvec.gram)              — fused Fourier-domain Gram
     choose_grid / paper_grid                   — comm-aware 2-D partitioning
@@ -15,8 +16,8 @@ from .precision import (PrecisionConfig, all_configs, machine_eps,  # noqa: F401
                         DOUBLE, SINGLE, TPU_BASELINE, TPU_FAST,
                         PAPER_OPT_F, PAPER_OPT_FSTAR, PAPER_OPT_F_LARGE,
                         TPU_OPT_F)
-from .pipeline import (Stage, matvec_plan, gram_plan, run_plan,  # noqa: F401
-                       stage_counts, record_stages)
+from .pipeline import (ExecOpts, Stage, matvec_plan, gram_plan,  # noqa: F401
+                       run_plan, stage_counts, record_stages)
 from .fftmatvec import FFTMatvec, MatvecOptions, phase_callables  # noqa: F401
 from .gram import GramOperator  # noqa: F401
 from .toeplitz import (dense_from_block_column, dense_matvec,  # noqa: F401

@@ -31,27 +31,46 @@ not yet replicated) and a ``psum`` over rows.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.backend import DispatchTable
 from repro.jax_compat import shard_map
 from . import pipeline
 from . import precision as prec
-from .pipeline import reorder_planes  # noqa: F401  (public reorder stage)
+from .pipeline import ExecOpts, reorder_planes  # noqa: F401  (public API)
 from .precision import PrecisionConfig
 from .toeplitz import fourier_block_column
 
 
-@dataclasses.dataclass(frozen=True)
-class MatvecOptions:
-    """Static implementation knobs (perf levers, see EXPERIMENTS.md §Perf)."""
-    use_pallas: bool | str = False   # custom SBGEMV kernel ("auto" = dispatch)
-    interpret: bool = False          # Pallas interpret mode (CPU validation)
-    fuse_pad_cast: bool = False      # use the fused Pallas pad+cast kernels
-    block_n: int = 512               # SBGEMV column-tile size
-    block_s: int = 128               # SBGEMM RHS-tile size (multi-RHS path)
+def MatvecOptions(use_pallas: bool | str = False, interpret: bool = False,
+                  fuse_pad_cast: bool = False, block_n: int = 512,
+                  block_s: int = 128) -> ExecOpts:
+    """Deprecation shim: the old per-call kernel knobs, mapped onto the
+    backend layer.  Construct :class:`repro.core.ExecOpts` directly (a
+    backend name/spec + a :class:`repro.backend.DispatchTable`) — this
+    spelling goes away next release.
+
+    Mapping: ``interpret=True`` -> the ``cpu-interpret`` validation
+    backend; ``use_pallas=True/False/"auto"`` -> a table forcing
+    pallas/xla/auto dispatch; ``fuse_pad_cast``/``block_*`` pass through
+    as ExecOpts overrides.
+    """
+    warnings.warn("MatvecOptions is deprecated; construct repro.core."
+                  "ExecOpts (backend=/dispatch=) instead",
+                  DeprecationWarning, stacklevel=2)
+    if use_pallas == "auto":
+        dispatch = None
+    elif use_pallas:
+        dispatch = DispatchTable(force="pallas")
+    else:
+        dispatch = DispatchTable(force="xla")
+    return ExecOpts(backend="cpu-interpret" if interpret else None,
+                    dispatch=dispatch, block_n=block_n, block_s=block_s,
+                    fuse_pad_cast=fuse_pad_cast)
 
 
 # ---------------------------------------------------------------------------
@@ -59,7 +78,7 @@ class MatvecOptions:
 # ---------------------------------------------------------------------------
 
 def _local_matvec(F_re, F_im, m, N_t: int, cfg: PrecisionConfig,
-                  opts: MatvecOptions, adjoint: bool):
+                  opts: ExecOpts, adjoint: bool):
     """The per-shard 5-phase pipeline (no collectives).  ``m`` is the local
     SOTI input block vector; returns the local (partial) SOTI output at the
     reduce level."""
@@ -69,7 +88,7 @@ def _local_matvec(F_re, F_im, m, N_t: int, cfg: PrecisionConfig,
 
 
 def _local_matmat(F_re, F_im, M, N_t: int, cfg: PrecisionConfig,
-                  opts: MatvecOptions, adjoint: bool):
+                  opts: ExecOpts, adjoint: bool):
     """Multi-RHS per-shard pipeline.  ``M`` is (R, N_t, S): S stacked SOTI
     block vectors, RHS axis minor — same plan as the single-RHS case; the
     executor flattens the block so phases 1/2/4/5 reuse the single-RHS
@@ -79,7 +98,7 @@ def _local_matmat(F_re, F_im, M, N_t: int, cfg: PrecisionConfig,
 
 
 def _local_gram(F_re, F_im, v, N_t: int, cfg: PrecisionConfig,
-                opts: MatvecOptions, space: str = "parameter",
+                opts: ExecOpts, space: str = "parameter",
                 mode: str = "exact", G_planes=None):
     """Per-shard fused Gram pipeline (F*F or F F*).  ``mode="circulant"``
     requires the precomputed per-bin Gram blocks in ``G_planes``."""
@@ -116,7 +135,7 @@ class FFTMatvec:
     F_hat_im: jax.Array
     N_t: int
     precision: PrecisionConfig = PrecisionConfig()
-    opts: MatvecOptions = MatvecOptions()
+    opts: ExecOpts = ExecOpts()
     mesh: Optional[Mesh] = None
     row_axis: str = "row"
     col_axis: str = "col"
@@ -124,10 +143,15 @@ class FFTMatvec:
     # -- constructors -------------------------------------------------------
     @classmethod
     def from_block_column(cls, F_col, precision=PrecisionConfig(),
-                          opts=MatvecOptions(), mesh=None,
-                          row_axis="row", col_axis="col") -> "FFTMatvec":
+                          opts=ExecOpts(), mesh=None,
+                          row_axis="row", col_axis="col",
+                          backend=None) -> "FFTMatvec":
         """Phase-0 setup (always at the highest precision, paper §3.2.1),
-        storing F_hat at the gemv level."""
+        storing F_hat at the gemv level.  ``backend`` is a convenience
+        override folded into ``opts`` (a spec or a registered name such
+        as ``"xla-ref"``)."""
+        if backend is not None:
+            opts = dataclasses.replace(opts, backend=backend)
         F_re, F_im = fourier_block_column(
             F_col, dtype=prec.real_dtype(precision.gemv))
         op = cls(F_re, F_im, F_col.shape[0], precision, opts, mesh,
@@ -151,6 +175,16 @@ class FFTMatvec:
         return dataclasses.replace(self, precision=precision,
                                    F_hat_re=self.F_hat_re.astype(dt),
                                    F_hat_im=self.F_hat_im.astype(dt))
+
+    def with_backend(self, backend, dispatch=None) -> "FFTMatvec":
+        """Same operator lowered through another backend (a
+        :class:`repro.backend.BackendSpec` or registered name) and,
+        optionally, another dispatch table.  Numerics are unchanged to
+        roundoff — backends select lowerings, not semantics."""
+        opts = dataclasses.replace(self.opts, backend=backend)
+        if dispatch is not None:
+            opts = dataclasses.replace(opts, dispatch=dispatch)
+        return dataclasses.replace(self, opts=opts)
 
     def autotune(self, tol: float, *, full_result: bool = False, **kw):
         """Dynamic mixed-precision selection (paper §3.2 at runtime).

@@ -78,11 +78,12 @@ class GramOperator:
                 raise NotImplementedError(
                     "circulant Gram precompute contracts over the sharded "
                     "operator axis; use mode='exact' on meshes")
+            r = op.opts.resolve()
+            dt = prec.real_dtype(op.precision.gemv)
             G_re, G_im = kops.sbgemm_gram(
-                op.F_hat_re, op.F_hat_im, space=space,
-                out_dtype=prec.real_dtype(op.precision.gemv),
-                use_pallas=op.opts.use_pallas, block_n=op.opts.block_n,
-                interpret=op.opts.interpret)
+                op.F_hat_re, op.F_hat_im, space=space, out_dtype=dt,
+                backend=r.spec, dispatch=r.table.for_dtype(dt, r.spec),
+                block_n=r.block_n)
         return cls(op, space, mode, G_re, G_im)
 
     # -- delegated operator identity -----------------------------------------

@@ -36,17 +36,82 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
-from typing import Iterator, Mapping, Optional, Sequence, Tuple
+from typing import Iterator, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.backend import (BackendSpec, DispatchTable, default_table,
+                           resolve_backend)
 from repro.kernels import ops as kops
 from . import precision as prec
 from .precision import PrecisionConfig
 
 STAGE_KINDS = ("pad", "fft", "reorder", "gemv", "ifft", "mask", "unpad",
                "psum")
+
+
+# ---------------------------------------------------------------------------
+# Execution options: which backend lowers the plan, and per-stage overrides.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExecOpts:
+    """How a plan lowers: a backend + a dispatch table + stage overrides.
+
+    This replaced the old ``MatvecOptions`` kwarg tangle
+    (``use_pallas``/``interpret``/``fuse_pad_cast``/``block_*`` threaded
+    through every call site): kernel selection is now a property of the
+    :mod:`repro.backend` layer, consulted once per stage at plan-lowering
+    (trace) time.
+
+    ``backend``        a :class:`repro.backend.BackendSpec`, a registered
+                       name ("tpu-pallas", "xla-ref", ...), or None — the
+                       probed process backend (``REPRO_BACKEND`` env
+                       override applies).
+    ``dispatch``       transition-point table; None = the backend's
+                       default (calibrate with
+                       :func:`repro.backend.calibrate_dispatch`).
+    ``block_n/_s``     SBGEMV/SBGEMM tile overrides (None = spec default).
+    ``fuse_pad_cast``  pin the fused Pallas pad+cast kernels on/off; None
+                       lets the dispatch table decide.  A True preference
+                       the backend cannot honor (f64 stages) falls back —
+                       memory ops are never worth an error.
+
+    Hashable, so operators can pass it as a jit static argument.
+    """
+
+    backend: Union[BackendSpec, str, None] = None
+    dispatch: Optional[DispatchTable] = None
+    block_n: Optional[int] = None
+    block_s: Optional[int] = None
+    fuse_pad_cast: Optional[bool] = None
+
+    def resolve(self) -> "ResolvedOpts":
+        """Bind to the concrete backend (probe happens here, at lowering
+        time — never at operator construction)."""
+        spec = resolve_backend(self.backend)
+        table = self.dispatch if self.dispatch is not None \
+            else default_table(spec)
+        return ResolvedOpts(spec=spec, table=table,
+                            block_n=self.block_n or spec.default_block_n,
+                            block_s=self.block_s or spec.default_block_s,
+                            fuse_pad_cast=self.fuse_pad_cast)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedOpts:
+    """ExecOpts bound to a concrete spec — what the stage impls consume."""
+
+    spec: BackendSpec
+    table: DispatchTable
+    block_n: int
+    block_s: int
+    fuse_pad_cast: Optional[bool]
+
+
+def _resolved(opts) -> ResolvedOpts:
+    return opts if isinstance(opts, ResolvedOpts) else opts.resolve()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,8 +173,8 @@ def reorder_planes(re, im, level: str, *, to_tosi: bool, S: int = 1):
 
 def _pad(stage, x, operands, N_t, S, opts):
     return kops.pad_cast(x, 2 * N_t, prec.real_dtype(stage.level),
-                         use_pallas=opts.fuse_pad_cast,
-                         interpret=opts.interpret)
+                         backend=opts.spec, dispatch=opts.table,
+                         fuse=opts.fuse_pad_cast)
 
 
 def _fft(stage, x, operands, N_t, S, opts):
@@ -135,14 +200,17 @@ def _gemv(stage, x, operands, N_t, S, opts):
     dt = prec.real_dtype(stage.level)
     mode = "H" if stage.adjoint else "N"
     x_re, x_im = (p.astype(dt) for p in x)
+    # stage-level dispatch: a forced-Pallas preference relaxes to auto for
+    # levels the backend's Pallas cannot run (d stages of the paper ladder
+    # on TPU keep flowing through XLA, exactly as before)
+    table = opts.table.for_dtype(dt, opts.spec)
     if S == 1:
         return kops.sbgemv(A_re.astype(dt), A_im.astype(dt), x_re, x_im,
-                           mode, out_dtype=dt, use_pallas=opts.use_pallas,
-                           block_n=opts.block_n, interpret=opts.interpret)
+                           mode, out_dtype=dt, backend=opts.spec,
+                           dispatch=table, block_n=opts.block_n)
     return kops.sbgemm(A_re.astype(dt), A_im.astype(dt), x_re, x_im, mode,
-                       out_dtype=dt, use_pallas=opts.use_pallas,
-                       block_n=opts.block_n, block_s=opts.block_s,
-                       interpret=opts.interpret)
+                       out_dtype=dt, backend=opts.spec, dispatch=table,
+                       block_n=opts.block_n, block_s=opts.block_s)
 
 
 def _ifft(stage, x, operands, N_t, S, opts):
@@ -161,16 +229,16 @@ def _mask(stage, x, operands, N_t, S, opts):
     # lowers this measurably faster — through the same fused Pallas
     # pad/cast kernels as the boundary phases when enabled.
     dt = prec.real_dtype(stage.level)
-    y = kops.unpad_cast(x, N_t, dt, use_pallas=opts.fuse_pad_cast,
-                        interpret=opts.interpret)
-    return kops.pad_cast(y, 2 * N_t, dt, use_pallas=opts.fuse_pad_cast,
-                         interpret=opts.interpret)
+    y = kops.unpad_cast(x, N_t, dt, backend=opts.spec, dispatch=opts.table,
+                        fuse=opts.fuse_pad_cast)
+    return kops.pad_cast(y, 2 * N_t, dt, backend=opts.spec,
+                         dispatch=opts.table, fuse=opts.fuse_pad_cast)
 
 
 def _unpad(stage, x, operands, N_t, S, opts):
     return kops.unpad_cast(x, N_t, prec.real_dtype(stage.level),
-                           use_pallas=opts.fuse_pad_cast,
-                           interpret=opts.interpret)
+                           backend=opts.spec, dispatch=opts.table,
+                           fuse=opts.fuse_pad_cast)
 
 
 def _psum(stage, x, operands, N_t, S, opts):
@@ -217,7 +285,12 @@ def stage_counts(plan: Plan) -> collections.Counter:
 
 def run_stages(stages: Sequence[Stage], x, operands: Mapping, *, N_t: int,
                opts, S: int = 1):
-    """Fold ``x`` through ``stages`` (no layout promotion — see run_plan)."""
+    """Fold ``x`` through ``stages`` (no layout promotion — see run_plan).
+
+    ``opts`` is an :class:`ExecOpts` (resolved against the live backend
+    here, at lowering time) or an already-resolved :class:`ResolvedOpts`.
+    """
+    opts = _resolved(opts)
     for stage in stages:
         for counter in _active_counters:
             counter[stage.kind] += 1

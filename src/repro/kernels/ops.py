@@ -1,40 +1,100 @@
-"""Jit'd wrappers + shape-heuristic dispatch for the Pallas kernels.
+"""Backend-dispatched wrappers for the Pallas kernels.
 
-This layer recreates the paper's rocBLAS *host dispatcher* integration: the
-optimized short-wide kernel was inserted into the rocBLAS dispatch function
-(with transition points set from benchmarking) so application call sites
-stayed unchanged.  Here, ``sbgemv``/``sbgemv_real`` pick between the XLA
-default lowering (einsum -> dot_general) and the custom Pallas kernel based
-on the matrix shape, and handle the padding to hardware-aligned shapes.
+This layer is the repo's rocBLAS *host dispatcher* (paper §2.3): the
+optimized short-wide kernel was inserted into the rocBLAS dispatch
+function with benchmarking-derived transition points, so application
+call sites never chose a kernel.  Here every op resolves a
+:class:`repro.backend.BackendSpec` (what the hardware can do) and a
+:class:`repro.backend.DispatchTable` (where the transition points sit)
+and routes between three lowerings:
+
+    "pallas"  the custom short-wide Pallas kernels (``sbgemv.py``),
+    "xla"     the traffic-fused XLA formulation (each A plane read once
+              for both output planes),
+    "ref"     the pure-jnp oracles (``ref.py``) — the forced ``xla-ref``
+              reference backend and the numerical ground truth.
+
+Explicit-vs-auto contract (the old silent-downgrade bug is gone): a
+*forced* Pallas path that the backend cannot run — f64 data on a
+Pallas without an f64 datapath, or no Pallas at all — raises
+:class:`repro.backend.UnsupportedOnBackend`; automatic dispatch falls
+back to the XLA path instead.
+
+The legacy ``use_pallas=/interpret=/xla_fused=`` kwargs remain as a
+one-release deprecation shim mapping onto (backend, dispatch) — see
+:func:`resolve_backend_dispatch`.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import warnings
+
 import jax.numpy as jnp
+
+from repro.backend import (DispatchTable, TPU_PALLAS, default_table,
+                           resolve_backend)
+from repro.backend.dispatch import DEFAULT_SHORT_WIDE_RATIO
 
 from . import ref as _ref
 from . import pad_cast as _pad_cast
 from . import sbgemv as _sbgemv
+from .padding import pad_planes, pad_to_multiple, round_up
 
-# Kernel transition point, in the spirit of the paper's benchmarking-derived
-# rocBLAS host-launcher thresholds: the custom kernel wins for "short and
-# wide" (m << n); the stock lowering is fine for squarish shapes.
-SHORT_WIDE_RATIO = 4
+# Back-compat alias: the transition point now lives in DispatchTable.
+SHORT_WIDE_RATIO = DEFAULT_SHORT_WIDE_RATIO
 
+_UNSET = object()
 
-def _pad_to(x, axis: int, multiple: int):
-    size = x.shape[axis]
-    rem = (-size) % multiple
-    if rem == 0:
-        return x, size
-    pad = [(0, 0)] * x.ndim
-    pad[axis] = (0, rem)
-    return jnp.pad(x, pad), size
+_DEPRECATION = ("the use_pallas/interpret/xla_fused kwargs are deprecated; "
+                "pass backend=/dispatch= (see repro.backend) — the legacy "
+                "spelling will be removed next release")
 
 
-def use_custom_kernel(m: int, n: int, mode: str) -> bool:
-    """Shape heuristic (the 'host dispatcher')."""
-    return m * SHORT_WIDE_RATIO <= n and mode in ("N", "T", "H")
+def resolve_backend_dispatch(backend=None, dispatch=None, *,
+                             use_pallas=_UNSET, interpret=_UNSET,
+                             xla_fused=_UNSET):
+    """Resolve ``(BackendSpec, DispatchTable)``, absorbing legacy kwargs.
+
+    The deprecation shim maps the old flags onto the new layer:
+    ``interpret=True`` -> a Pallas-interpret view of the current spec;
+    ``use_pallas=True/False/"auto"`` -> ``force="pallas"/"xla"/None``;
+    ``xla_fused=False`` -> ``force="ref"``.  An explicit ``dispatch=``
+    wins over the legacy force flags.
+    """
+    spec = resolve_backend(backend)
+    legacy = {k: v for k, v in (("use_pallas", use_pallas),
+                                ("interpret", interpret),
+                                ("xla_fused", xla_fused))
+              if v is not _UNSET}
+    if legacy:
+        warnings.warn(_DEPRECATION, DeprecationWarning, stacklevel=3)
+        if legacy.get("interpret"):
+            spec = dataclasses.replace(spec, pallas=True,
+                                       pallas_interpret=True,
+                                       reference=False)
+        up = legacy.get("use_pallas", _UNSET)
+        if dispatch is None:
+            # precedence mirrors the old call sites: an explicit
+            # use_pallas=True always won before xla_fused was consulted.
+            # On a backend without Pallas the force now raises a clear
+            # UnsupportedOnBackend instead of dying in Mosaic lowering.
+            if up is True:
+                dispatch = DispatchTable(force="pallas")
+            elif legacy.get("xla_fused") is False:
+                dispatch = DispatchTable(force="ref")
+            elif up is False:
+                dispatch = DispatchTable(force="xla")
+    if dispatch is None:
+        dispatch = default_table(spec)
+    return spec, dispatch
+
+
+def use_custom_kernel(m: int, n: int, mode: str,
+                      table: DispatchTable | None = None) -> bool:
+    """Shape heuristic (the 'host dispatcher'), on the default table."""
+    table = table or DispatchTable()
+    return table.gemv_path(m, n, mode, jnp.float32, TPU_PALLAS) == "pallas"
 
 
 def _sbgemv_xla_fused(A_re, A_im, x_re, x_im, mode: str):
@@ -60,93 +120,110 @@ def _sbgemv_xla_fused(A_re, A_im, x_re, x_im, mode: str):
 
 
 def sbgemv(A_re, A_im, x_re, x_im, mode: str = "N", *, out_dtype=None,
-           use_pallas: bool | str = "auto", block_n: int = 512,
-           interpret: bool = False, xla_fused: bool = True):
-    """Strided-batched complex GEMV on split planes; dispatches between the
-    Pallas short-wide kernel and the XLA einsum lowering.
+           backend=None, dispatch=None, block_n: int | None = None,
+           use_pallas=_UNSET, interpret=_UNSET, xla_fused=_UNSET):
+    """Strided-batched complex GEMV on split planes, backend-dispatched.
 
     A planes (B, m, n); mode "N": x (B, n) -> y (B, m); "T"/"H": x (B, m)
     -> y (B, n).  Returns (y_re, y_im) in ``out_dtype`` (default: A dtype).
+    ``backend``/``dispatch`` select the lowering (None = probed backend /
+    its default table); the trailing kwargs are the deprecation shim.
     """
     B, m, n = A_re.shape
     out_dtype = out_dtype or A_re.dtype
-    if A_re.dtype == jnp.float64:
-        use_pallas = False  # Pallas TPU has no f64; paper mode runs via XLA.
-    if use_pallas == "auto":
-        use_pallas = use_custom_kernel(m, n, mode)
-    if not use_pallas:
-        fn = _sbgemv_xla_fused if xla_fused else _ref.sbgemv_complex_ref
+    spec, table = resolve_backend_dispatch(
+        backend, dispatch, use_pallas=use_pallas, interpret=interpret,
+        xla_fused=xla_fused)
+    path = table.gemv_path(m, n, mode, A_re.dtype, spec)
+    if path != "pallas":
+        fn = _ref.sbgemv_complex_ref if path == "ref" else _sbgemv_xla_fused
         y_re, y_im = fn(A_re, A_im, x_re, x_im, mode)
         return y_re.astype(out_dtype), y_im.astype(out_dtype)
 
-    bn = min(block_n, max(128, n))
+    bn = min(block_n or spec.default_block_n, max(spec.lane, n))
+    itp = spec.pallas_interpret
     # pad m to sublane multiples, n to a tile multiple (zero rows/cols
     # contribute zero to the dots)
-    Ar, _ = _pad_to(A_re, 1, 8)
-    Ai, _ = _pad_to(A_im, 1, 8)
-    Ar, n0 = _pad_to(Ar, 2, bn)
-    Ai, _ = _pad_to(Ai, 2, bn)
+    (Ar, Ai), _ = pad_planes((A_re, A_im), 1, spec.sublane)
+    (Ar, Ai), n0 = pad_planes((Ar, Ai), 2, bn)
     if mode == "N":
-        xr, _ = _pad_to(x_re, 1, bn)
-        xi, _ = _pad_to(x_im, 1, bn)
+        (xr, xi), _ = pad_planes((x_re, x_im), 1, bn)
         y_re, y_im = _sbgemv.sbgemv_n_complex(Ar, Ai, xr, xi, block_n=bn,
-                                              interpret=interpret)
+                                              interpret=itp)
         y_re, y_im = y_re[:, :m], y_im[:, :m]
     else:
-        xr, _ = _pad_to(x_re, 1, 8)
-        xi, _ = _pad_to(x_im, 1, 8)
+        (xr, xi), _ = pad_planes((x_re, x_im), 1, spec.sublane)
         y_re, y_im = _sbgemv.sbgemv_th_complex(Ar, Ai, xr, xi,
                                                conj=(mode == "H"),
-                                               block_n=bn, interpret=interpret)
+                                               block_n=bn, interpret=itp)
         y_re, y_im = y_re[:, :n0], y_im[:, :n0]
     return y_re.astype(out_dtype), y_im.astype(out_dtype)
 
 
 def sbgemv_real(A, x, mode: str = "N", *, out_dtype=None,
-                use_pallas: bool | str = "auto", block_n: int = 512,
-                interpret: bool = False):
+                backend=None, dispatch=None, block_n: int | None = None,
+                use_pallas=_UNSET, interpret=_UNSET):
     """Real strided-batched GEMV with the same dispatch logic."""
     B, m, n = A.shape
     out_dtype = out_dtype or A.dtype
-    if A.dtype == jnp.float64:
-        use_pallas = False
-    if use_pallas == "auto":
-        use_pallas = use_custom_kernel(m, n, mode)
-    if not use_pallas:
+    spec, table = resolve_backend_dispatch(
+        backend, dispatch, use_pallas=use_pallas, interpret=interpret)
+    path = table.gemv_path(m, n, mode, A.dtype, spec)
+    if path != "pallas":
         return _ref.sbgemv_real_ref(A, x, mode).astype(out_dtype)
 
-    bn = min(block_n, max(128, n))
-    A2, _ = _pad_to(A, 1, 8)
-    A2, n0 = _pad_to(A2, 2, bn)
+    bn = min(block_n or spec.default_block_n, max(spec.lane, n))
+    itp = spec.pallas_interpret
+    A2, _ = pad_to_multiple(A, 1, spec.sublane)
+    A2, n0 = pad_to_multiple(A2, 2, bn)
     if mode == "N":
-        x2, _ = _pad_to(x, 1, bn)
-        y = _sbgemv.sbgemv_n_real(A2, x2, block_n=bn, interpret=interpret)[:, :m]
+        x2, _ = pad_to_multiple(x, 1, bn)
+        y = _sbgemv.sbgemv_n_real(A2, x2, block_n=bn, interpret=itp)[:, :m]
     else:
-        x2, _ = _pad_to(x, 1, 8)
-        y = _sbgemv.sbgemv_th_real(A2, x2, block_n=bn, interpret=interpret)[:, :n0]
+        x2, _ = pad_to_multiple(x, 1, spec.sublane)
+        y = _sbgemv.sbgemv_th_real(A2, x2, block_n=bn, interpret=itp)[:, :n0]
     return y.astype(out_dtype)
 
 
-def pad_cast(x, pad_to: int, out_dtype, *, use_pallas: bool = False,
-             interpret: bool = False):
-    """(R, T) -> (R, pad_to) fused zero-pad + cast (Phase-1 memory op)."""
-    if x.dtype == jnp.float64 or out_dtype == jnp.float64:
-        use_pallas = False
-    if not use_pallas:
+def pad_cast(x, pad_to: int, out_dtype, *, backend=None, dispatch=None,
+             fuse: bool | None = None, use_pallas=_UNSET, interpret=_UNSET):
+    """(R, T) -> (R, pad_to) fused zero-pad + cast (Phase-1 memory op).
+
+    ``fuse`` pins the fused-Pallas-kernel decision (None consults the
+    dispatch table's cutover); a fuse preference the backend cannot
+    honor (f64, no Pallas) silently takes the reference path — this is a
+    memory op, the numerics are identical either way.
+    """
+    spec, table = resolve_backend_dispatch(
+        backend, dispatch, interpret=interpret)
+    if use_pallas is not _UNSET:
+        warnings.warn(_DEPRECATION, DeprecationWarning, stacklevel=2)
+        fuse = bool(use_pallas)
+    if not table.fuse_pad_cast(x.shape[-1], x.dtype, out_dtype, spec,
+                               prefer=fuse):
         return _ref.pad_cast_ref(x, pad_to, out_dtype)
-    x2, R0 = _pad_to(x, 0, 8)
-    return _pad_cast.pad_cast(x2, pad_to, out_dtype, interpret=interpret)[:R0]
+    x2, R0 = pad_to_multiple(x, 0, spec.sublane)
+    return _pad_cast.pad_cast(x2, pad_to, out_dtype,
+                              block_rows=spec.sublane,
+                              interpret=spec.pallas_interpret)[:R0]
 
 
-def unpad_cast(x, keep: int, out_dtype, *, use_pallas: bool = False,
-               interpret: bool = False):
+def unpad_cast(x, keep: int, out_dtype, *, backend=None, dispatch=None,
+               fuse: bool | None = None, use_pallas=_UNSET,
+               interpret=_UNSET):
     """(R, P) -> (R, keep) fused unpad + cast (Phase-5 memory op)."""
-    if x.dtype == jnp.float64 or out_dtype == jnp.float64:
-        use_pallas = False
-    if not use_pallas:
+    spec, table = resolve_backend_dispatch(
+        backend, dispatch, interpret=interpret)
+    if use_pallas is not _UNSET:
+        warnings.warn(_DEPRECATION, DeprecationWarning, stacklevel=2)
+        fuse = bool(use_pallas)
+    if not table.fuse_pad_cast(x.shape[-1], x.dtype, out_dtype, spec,
+                               prefer=fuse):
         return _ref.unpad_cast_ref(x, keep, out_dtype)
-    x2, R0 = _pad_to(x, 0, 8)
-    return _pad_cast.unpad_cast(x2, keep, out_dtype, interpret=interpret)[:R0]
+    x2, R0 = pad_to_multiple(x, 0, spec.sublane)
+    return _pad_cast.unpad_cast(x2, keep, out_dtype,
+                                block_rows=spec.sublane,
+                                interpret=spec.pallas_interpret)[:R0]
 
 
 # ---------------------------------------------------------------------------
@@ -154,10 +231,6 @@ def unpad_cast(x, keep: int, out_dtype, *, use_pallas: bool = False,
 # the GEMV path — the RHS axis only raises arithmetic intensity, so the
 # shapes that favored the custom kernel still do.
 # ---------------------------------------------------------------------------
-
-def _round_up(x: int, multiple: int) -> int:
-    return ((x + multiple - 1) // multiple) * multiple
-
 
 def _sbgemm_xla_fused(A_re, A_im, X_re, X_im, mode: str):
     """XLA path with the kernel's traffic pattern: both RHS planes stacked
@@ -176,9 +249,9 @@ def _sbgemm_xla_fused(A_re, A_im, X_re, X_im, mode: str):
 
 
 def sbgemm(A_re, A_im, X_re, X_im, mode: str = "N", *, out_dtype=None,
-           use_pallas: bool | str = "auto", block_n: int = 512,
-           block_s: int = 128, interpret: bool = False,
-           xla_fused: bool = True):
+           backend=None, dispatch=None, block_n: int | None = None,
+           block_s: int | None = None, use_pallas=_UNSET, interpret=_UNSET,
+           xla_fused=_UNSET):
     """Strided-batched complex GEMM (multi-RHS GEMV) on split planes.
 
     A planes (B, m, n); mode "N": X (B, n, S) -> Y (B, m, S); "T"/"H":
@@ -189,45 +262,40 @@ def sbgemm(A_re, A_im, X_re, X_im, mode: str = "N", *, out_dtype=None,
     B, m, n = A_re.shape
     S = X_re.shape[2]
     out_dtype = out_dtype or A_re.dtype
-    if A_re.dtype == jnp.float64:
-        use_pallas = False  # Pallas TPU has no f64; paper mode runs via XLA.
-    if use_pallas == "auto":
-        use_pallas = use_custom_kernel(m, n, mode)
-    if not use_pallas:
-        fn = _sbgemm_xla_fused if xla_fused else _ref.sbgemm_complex_ref
+    spec, table = resolve_backend_dispatch(
+        backend, dispatch, use_pallas=use_pallas, interpret=interpret,
+        xla_fused=xla_fused)
+    path = table.gemv_path(m, n, mode, A_re.dtype, spec)
+    if path != "pallas":
+        fn = _ref.sbgemm_complex_ref if path == "ref" else _sbgemm_xla_fused
         Y_re, Y_im = fn(A_re, A_im, X_re, X_im, mode)
         return Y_re.astype(out_dtype), Y_im.astype(out_dtype)
 
-    bn = min(block_n, max(128, n))
-    bs = min(block_s, _round_up(S, 8))
-    Ar, _ = _pad_to(A_re, 1, 8)
-    Ai, _ = _pad_to(A_im, 1, 8)
-    Ar, n0 = _pad_to(Ar, 2, bn)
-    Ai, _ = _pad_to(Ai, 2, bn)
+    bn = min(block_n or spec.default_block_n, max(spec.lane, n))
+    bs = min(block_s or spec.default_block_s, round_up(S, spec.sublane))
+    itp = spec.pallas_interpret
+    (Ar, Ai), _ = pad_planes((A_re, A_im), 1, spec.sublane)
+    (Ar, Ai), n0 = pad_planes((Ar, Ai), 2, bn)
     if mode == "N":
-        Xr, _ = _pad_to(X_re, 1, bn)
-        Xi, _ = _pad_to(X_im, 1, bn)
-        Xr, _ = _pad_to(Xr, 2, bs)
-        Xi, _ = _pad_to(Xi, 2, bs)
+        (Xr, Xi), _ = pad_planes((X_re, X_im), 1, bn)
+        (Xr, Xi), _ = pad_planes((Xr, Xi), 2, bs)
         Y_re, Y_im = _sbgemv.sbgemm_n_complex(Ar, Ai, Xr, Xi, block_n=bn,
-                                              block_s=bs, interpret=interpret)
+                                              block_s=bs, interpret=itp)
         Y_re, Y_im = Y_re[:, :m, :S], Y_im[:, :m, :S]
     else:
-        Xr, _ = _pad_to(X_re, 1, 8)
-        Xi, _ = _pad_to(X_im, 1, 8)
-        Xr, _ = _pad_to(Xr, 2, bs)
-        Xi, _ = _pad_to(Xi, 2, bs)
+        (Xr, Xi), _ = pad_planes((X_re, X_im), 1, spec.sublane)
+        (Xr, Xi), _ = pad_planes((Xr, Xi), 2, bs)
         Y_re, Y_im = _sbgemv.sbgemm_th_complex(Ar, Ai, Xr, Xi,
                                                conj=(mode == "H"),
                                                block_n=bn, block_s=bs,
-                                               interpret=interpret)
+                                               interpret=itp)
         Y_re, Y_im = Y_re[:, :n0, :S], Y_im[:, :n0, :S]
     return Y_re.astype(out_dtype), Y_im.astype(out_dtype)
 
 
 def sbgemm_gram(A_re, A_im, *, space: str = "parameter", out_dtype=None,
-                use_pallas: bool | str = "auto", block_n: int = 512,
-                interpret: bool = False):
+                backend=None, dispatch=None, block_n: int | None = None,
+                use_pallas=_UNSET, interpret=_UNSET):
     """Per-bin Hermitian Gram blocks: G[k] = A[k]^H A[k] ("parameter") or
     A[k] A[k]^H ("data") on split planes, with the same dispatch logic as
     the GEMV/GEMM paths.
@@ -248,20 +316,17 @@ def sbgemm_gram(A_re, A_im, *, space: str = "parameter", out_dtype=None,
         m, n = n, m
     elif space != "parameter":
         raise ValueError(f"bad gram space {space!r}")
-    if A_re.dtype == jnp.float64:
-        use_pallas = False  # Pallas TPU has no f64; paper mode runs via XLA.
-    if use_pallas == "auto":
-        use_pallas = use_custom_kernel(m, n, "H")
-    if not use_pallas:
+    spec, table = resolve_backend_dispatch(
+        backend, dispatch, use_pallas=use_pallas, interpret=interpret)
+    path = table.gemv_path(m, n, "H", A_re.dtype, spec)
+    if path != "pallas":
         G_re, G_im = _ref.sbgemm_gram_ref(A_re, A_im, "parameter")
     else:
-        bn = min(block_n, max(128, n))
-        Ar, _ = _pad_to(A_re, 1, 8)
-        Ai, _ = _pad_to(A_im, 1, 8)
-        Ar, n0 = _pad_to(Ar, 2, bn)
-        Ai, _ = _pad_to(Ai, 2, bn)
-        G_re, G_im = _sbgemv.sbgemm_gram_complex(Ar, Ai, block_n=bn,
-                                                 interpret=interpret)
+        bn = min(block_n or spec.default_block_n, max(spec.lane, n))
+        (Ar, Ai), _ = pad_planes((A_re, A_im), 1, spec.sublane)
+        (Ar, Ai), _ = pad_planes((Ar, Ai), 2, bn)
+        G_re, G_im = _sbgemv.sbgemm_gram_complex(
+            Ar, Ai, block_n=bn, interpret=spec.pallas_interpret)
         G_re, G_im = G_re[:, :n, :n], G_im[:, :n, :n]
     # enforce exact Hermitian symmetry (kills accumulation-order roundoff)
     G_re = 0.5 * (G_re + G_re.transpose(0, 2, 1))
@@ -270,31 +335,32 @@ def sbgemm_gram(A_re, A_im, *, space: str = "parameter", out_dtype=None,
 
 
 def sbgemm_real(A, X, mode: str = "N", *, out_dtype=None,
-                use_pallas: bool | str = "auto", block_n: int = 512,
-                block_s: int = 128, interpret: bool = False):
+                backend=None, dispatch=None, block_n: int | None = None,
+                block_s: int | None = None, use_pallas=_UNSET,
+                interpret=_UNSET):
     """Real strided-batched GEMM with the same dispatch logic."""
     B, m, n = A.shape
     S = X.shape[2]
     out_dtype = out_dtype or A.dtype
-    if A.dtype == jnp.float64:
-        use_pallas = False
-    if use_pallas == "auto":
-        use_pallas = use_custom_kernel(m, n, mode)
-    if not use_pallas:
+    spec, table = resolve_backend_dispatch(
+        backend, dispatch, use_pallas=use_pallas, interpret=interpret)
+    path = table.gemv_path(m, n, mode, A.dtype, spec)
+    if path != "pallas":
         return _ref.sbgemm_real_ref(A, X, mode).astype(out_dtype)
 
-    bn = min(block_n, max(128, n))
-    bs = min(block_s, _round_up(S, 8))
-    A2, _ = _pad_to(A, 1, 8)
-    A2, n0 = _pad_to(A2, 2, bn)
+    bn = min(block_n or spec.default_block_n, max(spec.lane, n))
+    bs = min(block_s or spec.default_block_s, round_up(S, spec.sublane))
+    itp = spec.pallas_interpret
+    A2, _ = pad_to_multiple(A, 1, spec.sublane)
+    A2, n0 = pad_to_multiple(A2, 2, bn)
     if mode == "N":
-        X2, _ = _pad_to(X, 1, bn)
-        X2, _ = _pad_to(X2, 2, bs)
+        X2, _ = pad_to_multiple(X, 1, bn)
+        X2, _ = pad_to_multiple(X2, 2, bs)
         Y = _sbgemv.sbgemm_n_real(A2, X2, block_n=bn, block_s=bs,
-                                  interpret=interpret)[:, :m, :S]
+                                  interpret=itp)[:, :m, :S]
     else:
-        X2, _ = _pad_to(X, 1, 8)
-        X2, _ = _pad_to(X2, 2, bs)
+        X2, _ = pad_to_multiple(X, 1, spec.sublane)
+        X2, _ = pad_to_multiple(X2, 2, bs)
         Y = _sbgemv.sbgemm_th_real(A2, X2, block_n=bn, block_s=bs,
-                                   interpret=interpret)[:, :n0, :S]
+                                   interpret=itp)[:, :n0, :S]
     return Y.astype(out_dtype)

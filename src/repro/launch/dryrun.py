@@ -42,7 +42,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import (ARCH_IDS, SHAPES, get_config, input_shard_specs,
                            input_specs, shape_applicable)
 from repro.configs.fftmatvec_paper import PAPER_SINGLE
-from repro.core import FFTMatvec, MatvecOptions, PrecisionConfig
+from repro.backend import DispatchTable
+from repro.core import ExecOpts, FFTMatvec, PrecisionConfig
 from repro.models import api
 from repro.models.sharding_ctx import DEFAULT_RULES, axis_rules
 from repro.optim import AdamW, constant_schedule
@@ -329,7 +330,8 @@ def lower_fftmatvec_cell(mesh, *, precision="sssss", adjoint=False,
            (row_axes[0] if row_axes else None))
     col = col_axes if len(col_axes) > 1 else col_axes[0]
     cfgp = PrecisionConfig.from_string(precision)
-    opts = MatvecOptions(use_pallas=use_pallas)
+    opts = ExecOpts(dispatch=DispatchTable(force="pallas")) if use_pallas \
+        else ExecOpts()
     K = fc.N_t + 1
     dt_of = {"d": jnp.float64, "s": jnp.float32, "h": jnp.bfloat16}
     F_hat = jax.ShapeDtypeStruct((K, fc.N_d, fc.N_m), dt_of[cfgp.gemv])

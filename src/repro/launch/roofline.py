@@ -20,9 +20,16 @@ import dataclasses
 import math
 import re
 
-PEAK_FLOPS = 197e12          # bf16 per chip
-HBM_BW = 819e9               # B/s per chip
-LINK_BW = 50e9               # B/s per ICI link
+from repro.backend import TPU_PALLAS, BackendSpec
+
+# Roofline peaks come from the backend capability spec (repro.backend);
+# the TPU-v5e-class target spec keeps the historical constants.  The
+# module-level names remain for callers that model the TPU target from
+# other hosts (benchmarks on CPU).
+TARGET_SPEC = TPU_PALLAS
+PEAK_FLOPS = TARGET_SPEC.peak_flops      # bf16 per chip
+HBM_BW = TARGET_SPEC.hbm_bandwidth       # B/s per chip
+LINK_BW = TARGET_SPEC.link_bandwidth     # B/s per ICI link
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
@@ -170,15 +177,18 @@ def hbm_floor_bytes(hlo_text: str) -> int:
 
 
 def roofline_terms(cost: dict, coll: CollectiveStats,
-                   bytes_floor: float | None = None) -> dict:
-    """Three roofline terms.  The memory term uses the perfect-fusion floor
-    when provided (raw cost-analysis bytes kept as ``memory_raw_s``)."""
+                   bytes_floor: float | None = None,
+                   spec: BackendSpec | None = None) -> dict:
+    """Three roofline terms against ``spec``'s peaks (default: the TPU
+    target spec).  The memory term uses the perfect-fusion floor when
+    provided (raw cost-analysis bytes kept as ``memory_raw_s``)."""
+    spec = spec or TARGET_SPEC
     flops = float(cost.get("flops", 0.0))
     bytes_raw = float(cost.get("bytes accessed", 0.0))
     bytes_mem = float(bytes_floor) if bytes_floor is not None else bytes_raw
-    t_compute = flops / PEAK_FLOPS
-    t_memory = bytes_mem / HBM_BW
-    t_coll = coll.total_bytes / LINK_BW
+    t_compute = flops / spec.peak_flops
+    t_memory = bytes_mem / spec.hbm_bandwidth
+    t_coll = coll.total_bytes / spec.link_bandwidth
     terms = {"compute_s": t_compute, "memory_s": t_memory,
              "collective_s": t_coll}
     dom = max(terms, key=terms.get)
@@ -186,7 +196,7 @@ def roofline_terms(cost: dict, coll: CollectiveStats,
     terms.update({
         "dominant": dom.replace("_s", ""),
         "step_time_bound_s": bound,
-        "memory_raw_s": bytes_raw / HBM_BW,
+        "memory_raw_s": bytes_raw / spec.hbm_bandwidth,
         "flops_per_device": flops,
         "bytes_per_device": bytes_mem,
         "bytes_raw_per_device": bytes_raw,
@@ -209,9 +219,10 @@ def useful_ratio(mf: float, flops_per_device: float, n_devices: int) -> float:
     return mf / hlo_global if hlo_global else float("nan")
 
 
-def roofline_fraction(mf: float, bound_s: float, n_devices: int) -> float:
+def roofline_fraction(mf: float, bound_s: float, n_devices: int,
+                      spec: BackendSpec | None = None) -> float:
     """Achieved fraction of compute roofline: useful FLOPs per second at the
     modeled step time vs peak."""
     if bound_s <= 0:
         return float("nan")
-    return (mf / n_devices / bound_s) / PEAK_FLOPS
+    return (mf / n_devices / bound_s) / (spec or TARGET_SPEC).peak_flops

@@ -238,11 +238,12 @@ def attention(q, k, v, *, causal: bool, cfg, q_offset=0):
     Pallas VMEM-resident kernel — TPU runtime; interpret-mode on CPU)."""
     unroll = cfg.analysis_mode
     if cfg.attn_impl == "flash" and q_offset == 0 and q.shape[1] > 1:
+        from repro.backend import current_backend
         from repro.kernels.flash_attention import flash_attention
         return flash_attention(q, k, v, causal=causal,
                                q_block=cfg.attn_q_chunk,
                                kv_block=cfg.attn_kv_chunk,
-                               interpret=jax.default_backend() == "cpu")
+                               interpret=current_backend().platform == "cpu")
     if causal and cfg.attn_impl == "block_causal" and q.shape[1] > 1:
         return block_causal_attention(q, k, v, q_offset=q_offset,
                                       q_chunk=cfg.attn_q_chunk,

@@ -26,6 +26,7 @@ from typing import Optional, Sequence
 
 import jax
 
+from repro.backend import DispatchTable
 from repro.core.pareto import ConfigRecord, optimal_config
 from repro.core.precision import PrecisionConfig
 
@@ -33,7 +34,12 @@ CACHE_ENV = "REPRO_TUNE_CACHE"
 # v2: the key space gained the ``variant="gram"`` fused-pipeline family,
 # whose measurements are not comparable with v1 records tuned against the
 # matvec-era eq.-(6) factors — v1 entries read as misses and are re-tuned.
-SCHEMA_VERSION = 2
+# v3: keys carry the backend fingerprint (repro.backend) and the dispatch-
+# table identity in place of the raw use_pallas/block_* kwargs; the cache
+# also stores calibrated dispatch tables per backend.  v1/v2 entries were
+# measured through lowerings the backend layer may no longer pick for the
+# same kwargs — they read as misses and are re-tuned.
+SCHEMA_VERSION = 3
 
 
 def default_cache_path() -> pathlib.Path:
@@ -51,10 +57,13 @@ def default_cache_path() -> pathlib.Path:
 class CacheKey:
     """Identity of one tuning problem.
 
-    ``detail`` captures everything else the measurements depend on —
-    kernel options, RHS count for matmat variants, timing mode — so a
-    cached selection is never silently reused for a materially different
-    workload (a Pallas-kernel tune must not answer an XLA-path query)."""
+    ``backend`` is the :meth:`repro.backend.BackendSpec.fingerprint` the
+    measurements ran through — a Pallas-backend tune must never answer an
+    xla-ref query on the same device.  ``detail`` captures everything
+    else the measurements depend on — the dispatch-table identity, block
+    sizes, RHS count for matmat variants, timing mode — so a cached
+    selection is never silently reused for a materially different
+    workload."""
     N_t: int
     N_d: int
     N_m: int
@@ -62,6 +71,7 @@ class CacheKey:
     variant: str = "matvec"
     device_kind: str = ""
     detail: str = ""
+    backend: str = ""
 
     @classmethod
     def for_operator(cls, op, ladder: Sequence[str],
@@ -72,9 +82,9 @@ class CacheKey:
         if device is None:
             device = jax.devices()[0]
         kind = f"{device.platform}:{getattr(device, 'device_kind', '')}"
-        o = op.opts
-        detail = (f"pallas={o.use_pallas};bn={o.block_n};bs={o.block_s};"
-                  f"mode={mode}")
+        r = op.opts.resolve()
+        detail = (f"disp={r.table.describe()};bn={r.block_n};"
+                  f"bs={r.block_s};mode={mode}")
         if variant in ("matmat", "rmatmat"):
             detail += f";S={n_rhs}"
         if input_tag:
@@ -84,11 +94,12 @@ class CacheKey:
             # runs read (or be read by) those entries
             detail += ";timer=custom"
         return cls(op.N_t, op.N_d, op.N_m, tuple(ladder), variant, kind,
-                   detail)
+                   detail, r.spec.fingerprint())
 
     def to_string(self) -> str:
         return (f"{self.N_t}x{self.N_d}x{self.N_m}/{''.join(self.ladder)}/"
-                f"{self.variant}/{self.device_kind}/{self.detail}")
+                f"{self.variant}/{self.device_kind}/{self.backend}/"
+                f"{self.detail}")
 
 
 def _valid_entry(entry) -> bool:
@@ -195,6 +206,35 @@ class TuningCache:
                              base_t / float(t) if t else float("nan"))
                 for prec, t in entry["times"].items()
                 if prec in entry["errors"]]
+
+    # -- dispatch tables -----------------------------------------------------
+    # Calibrated transition points (repro.backend.DispatchTable) live in
+    # the same JSON file, keyed by backend fingerprint: the rocBLAS-style
+    # "benchmarking-derived thresholds" persist next to the precision
+    # measurements they co-determine.
+
+    @staticmethod
+    def _dispatch_key(spec) -> str:
+        return f"dispatch/{spec.fingerprint()}"
+
+    def get_dispatch(self, spec) -> Optional[DispatchTable]:
+        """Calibrated table for this backend, or None (miss/stale/corrupt
+        falls back exactly like the tuning entries do)."""
+        entry = self._load().get(self._dispatch_key(spec))
+        if not isinstance(entry, dict) \
+                or entry.get("version") != SCHEMA_VERSION:
+            return None
+        try:
+            return DispatchTable.from_dict(entry["table"])
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def put_dispatch(self, spec, table: DispatchTable) -> None:
+        self._load()[self._dispatch_key(spec)] = {
+            "version": SCHEMA_VERSION,
+            "backend": spec.fingerprint(),
+            "table": table.to_dict(),
+        }
 
     def lookup_config(self, key: CacheKey,
                       tol: float) -> Optional[PrecisionConfig]:

@@ -119,13 +119,19 @@ def test_dispatcher_heuristic():
     assert ops.use_custom_kernel(100, 400, "T")
 
 
-def test_dispatcher_f64_falls_back():
-    """Pallas TPU has no f64; paper mode must route to the XLA lowering."""
+def test_dispatcher_f64_auto_falls_back_explicit_raises():
+    """Pallas TPU has no f64: *auto* dispatch routes paper mode to the XLA
+    lowering, but an explicit Pallas request now raises a clear
+    UnsupportedOnBackend instead of being silently overridden."""
+    from repro.backend import UnsupportedOnBackend
     B, m, n = 2, 4, 64
     Ar = jnp.ones((B, m, n), jnp.float64)
     xr = jnp.ones((B, m), jnp.float64)
-    got = ops.sbgemv(Ar, Ar, xr, xr, "H", use_pallas=True, interpret=True)
+    got = ops.sbgemv(Ar, Ar, xr, xr, "H", backend="cpu-interpret")  # auto
     assert got[0].dtype == jnp.float64
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(UnsupportedOnBackend, match="f64"):
+            ops.sbgemv(Ar, Ar, xr, xr, "H", use_pallas=True, interpret=True)
 
 
 # ---------------------------------------------------------------------------
@@ -194,9 +200,13 @@ def test_sbgemm_real(mode, dtype):
                                rtol=_tol(dtype), atol=_tol(dtype) * 8)
 
 
-def test_sbgemm_f64_falls_back():
+def test_sbgemm_f64_auto_falls_back_explicit_raises():
+    from repro.backend import UnsupportedOnBackend
     B, m, n, S = 2, 4, 64, 3
     A = jnp.ones((B, m, n), jnp.float64)
     X = jnp.ones((B, m, S), jnp.float64)
-    got = ops.sbgemm(A, A, X, X, "H", use_pallas=True, interpret=True)
+    got = ops.sbgemm(A, A, X, X, "H", backend="cpu-interpret")      # auto
     assert got[0].dtype == jnp.float64 and got[0].shape == (B, n, S)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(UnsupportedOnBackend, match="f64"):
+            ops.sbgemm(A, A, X, X, "H", use_pallas=True, interpret=True)

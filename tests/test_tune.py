@@ -56,11 +56,15 @@ def test_autotune_matches_exhaustive_fig3_scale():
     F_col = random_unrepresentable(jax.random.PRNGKey(0),
                                    (Nt, Nd, Nm)) / np.sqrt(Nm)
     m = random_unrepresentable(jax.random.PRNGKey(1), (Nm, Nt))
-    op = FFTMatvec.from_block_column(F_col)
+    # pinned backend: the oracle compares tuner logic, not lowerings, and
+    # its non-degeneracy assertion (some config above tol) holds for the
+    # fused-XLA error profile — keep it fixed across CI backend legs
+    op = FFTMatvec.from_block_column(F_col, backend="cpu-xla")
     harness = TimingHarness(timer=fake_timer)
 
     records = measure_configs(
-        lambda cfg: FFTMatvec.from_block_column(F_col, precision=cfg),
+        lambda cfg: FFTMatvec.from_block_column(F_col, precision=cfg,
+                                                backend="cpu-xla"),
         m, list(all_configs(("d", "s"))), harness=harness)
     exhaustive_best = optimal_config(records, tol)
 
@@ -326,20 +330,22 @@ def test_cache_stale_entry_is_miss(tmp_path):
     assert res2.config == res.config
 
 
-def test_cache_v1_schema_entry_is_stale_and_migrates(tmp_path):
-    """Schema-v1 entries (written before the ``variant="gram"`` key space
-    existed) must read as misses, and a re-tune must overwrite them in
-    place with current-version records."""
+@pytest.mark.parametrize("stale_version", [1, 2])
+def test_cache_stale_schema_entry_is_stale_and_migrates(tmp_path,
+                                                        stale_version):
+    """Entries from older schemata — v1 (pre-``variant="gram"``) and v2
+    (pre-backend-fingerprint keys) — must read as misses, and a re-tune
+    must overwrite them in place with current-version records."""
     from repro.tune.cache import SCHEMA_VERSION
-    assert SCHEMA_VERSION == 2
+    assert SCHEMA_VERSION == 3
     path = tmp_path / "tune.json"
     op, _, m = small_problem()
     res = autotune(op, tol=3e-6, v=m, ladder=("d", "s"), timer=fake_timer,
                    cache_path=path)
     key = res.cache_key
     data = json.loads(path.read_text())
-    v1_entry = dict(data[key.to_string()], version=1)   # as PR 2 wrote it
-    path.write_text(json.dumps({key.to_string(): v1_entry}))
+    stale = dict(data[key.to_string()], version=stale_version)
+    path.write_text(json.dumps({key.to_string(): stale}))
 
     cache = TuningCache(path)
     assert cache.get(key) is None                       # stale -> miss
@@ -353,6 +359,23 @@ def test_cache_v1_schema_entry_is_stale_and_migrates(tmp_path):
     res3 = autotune(op, tol=3e-6, v=m, ladder=("d", "s"), timer=fake_timer,
                     cache=TuningCache(path))
     assert res3.from_cache
+
+
+def test_cache_key_carries_backend_fingerprint():
+    """v3 keys embed the backend identity: the same problem tuned through
+    one backend must never answer another backend's query.  (Explicit
+    backends are compared so the test holds in every CI matrix leg,
+    including REPRO_BACKEND=xla-ref where the probed default IS xla-ref.)"""
+    from repro.backend import current_backend
+    op, _, _ = small_problem()
+    key_auto = CacheKey.for_operator(op, ("d", "s"))
+    assert current_backend().fingerprint() in key_auto.to_string()
+    key_ref = CacheKey.for_operator(op.with_backend("xla-ref"), ("d", "s"))
+    key_int = CacheKey.for_operator(op.with_backend("cpu-interpret"),
+                                    ("d", "s"))
+    assert key_ref.to_string() != key_int.to_string()
+    assert "xla-ref@" in key_ref.to_string()
+    assert "cpu-interpret@" in key_int.to_string()
 
 
 def test_cache_key_identity():
