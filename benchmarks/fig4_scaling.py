@@ -1,11 +1,16 @@
 """Paper Figure 4: weak scaling 8 -> 4,096 GPUs on Frontier with
 communication-aware partitioning and mixed precision.
 
-Two parts:
+Three parts:
   1. MEASURED multi-device execution at 8 simulated devices (subprocess
      with --xla_force_host_platform_device_count=8): distributed F matvec
-     error + the single-collective structure.
-  2. MODELED weak scaling to 4,096 devices (N_m = 5000p): per-device
+     error + f64-vs-mixed timing on the flat grid.
+  2. MEASURED grid-vs-flat comparison on the same 8 devices: the 2x4
+     hierarchical grid (two-stage reductions, d sharded over rows)
+     against the flat 1x8 grid — output parity to the precision-config
+     tolerance plus timing for matvec/rmatvec, so the modeled-vs-measured
+     gap of part 3 is finally observable on real collectives.
+  3. MODELED weak scaling to 4,096 devices (N_m = 5000p): per-device
      compute is constant; the comm model (core.partition, two-tier
      network) gives the collective time for the comm-aware grid vs the
      flat 1 x p grid — the paper reports >3x from comm-aware partitioning
@@ -14,15 +19,15 @@ Two parts:
 
 import argparse
 import json
-import os
 import subprocess
 import sys
 
 from repro.backend import TPU_PALLAS
 from repro.core import NetworkModel, choose_grid, matvec_comm_time, paper_grid
+from repro.jax_compat import forced_host_devices_env
 from .common import row
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_DEV = 8
 
 # per-device compute time for the local slice (5000 cols), from the fig2
 # bench scaled: memory-bound SBGEMV traffic / HBM bw of the TPU target
@@ -32,17 +37,40 @@ _HBM = TPU_PALLAS.hbm_bandwidth
 T_COMPUTE = (N_T + 1) * N_D * NM_PER * 8 / _HBM          # f64 baseline
 T_COMPUTE_MIXED = (N_T + 1) * N_D * NM_PER * 4 / _HBM    # f32 gemv phase
 
+
+def _run_measured(code: str, results: dict, tag: str):
+    """Run a measured leg in the 8-device subprocess (XLA_FLAGS and
+    PYTHONPATH extended, never clobbered — see ``forced_host_devices_env``);
+    the child reports its jax.device_count() and anything != 8 is a hard
+    failure — never silently time a 1-device run."""
+    out = subprocess.run([sys.executable, "-c", code],
+                         env=forced_host_devices_env(N_DEV),
+                         capture_output=True, text=True, timeout=560)
+    if out.returncode != 0:
+        row(f"fig4/{tag}", 0.0, f"FAILED:{out.stderr[-120:]}")
+        results[tag] = {"error": out.stderr[-400:]}
+        return None
+    res = json.loads(out.stdout.splitlines()[-1])
+    if res.get("device_count") != N_DEV:
+        msg = f"child saw {res.get('device_count')} devices, wanted {N_DEV}"
+        row(f"fig4/{tag}", 0.0, f"FAILED:{msg}")
+        results[tag] = {"error": msg}
+        return None
+    results[tag] = res
+    return res
+
+
 _MEASURED_CODE = r"""
 import jax, json
 jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp, time
 from repro.core import FFTMatvec, PrecisionConfig, random_block_column, rel_l2, dense_matvec
 from repro.jax_compat import make_mesh
+res = {"device_count": jax.device_count()}
 mesh = make_mesh((1, 8), ("row", "col"))
 Nt, Nd, Nm = %(shape)s
 F_col = random_block_column(jax.random.PRNGKey(0), Nt, Nd, Nm, dtype=jnp.float64)
 m = jax.random.normal(jax.random.PRNGKey(1), (Nm, Nt), dtype=jnp.float64)
-res = {}
 for tag, prec in [("f64", "ddddd"), ("mixed", "dssdd")]:
     op = FFTMatvec.from_block_column(F_col, precision=PrecisionConfig.from_string(prec), mesh=mesh)
     mv = jax.jit(op.matvec, in_shardings=op.m_sharding())
@@ -57,26 +85,84 @@ for tag, prec in [("f64", "ddddd"), ("mixed", "dssdd")]:
 print(json.dumps(res))
 """
 
+_GRID_VS_FLAT_CODE = r"""
+import jax, json
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp, time
+from repro.core import (FFTMatvec, PrecisionConfig, random_block_column,
+                        rel_l2, dense_matvec, dense_rmatvec)
+from repro.jax_compat import make_mesh
+res = {"device_count": jax.device_count()}
+Nt, Nd, Nm = %(shape)s
+F_col = random_block_column(jax.random.PRNGKey(0), Nt, Nd, Nm, dtype=jnp.float64)
+m = jax.random.normal(jax.random.PRNGKey(1), (Nm, Nt), dtype=jnp.float64)
+d = jax.random.normal(jax.random.PRNGKey(2), (Nd, Nt), dtype=jnp.float64)
+
+def bench(op):
+    mv = jax.jit(op.matvec, in_shardings=op.m_sharding())
+    rmv = jax.jit(op.rmatvec, in_shardings=op.d_sharding())
+    ms, ds = jax.device_put(m, op.m_sharding()), jax.device_put(d, op.d_sharding())
+    out_f = jax.block_until_ready(mv(ms))
+    out_a = jax.block_until_ready(rmv(ds))
+    t0 = time.perf_counter()
+    for _ in range(5):
+        out_f = mv(ms)
+    jax.block_until_ready(out_f)
+    t_f = (time.perf_counter() - t0) / 5
+    t0 = time.perf_counter()
+    for _ in range(5):
+        out_a = rmv(ds)
+    jax.block_until_ready(out_a)
+    return out_f, out_a, t_f, (time.perf_counter() - t0) / 5
+
+ref_f, ref_a = dense_matvec(F_col, m), dense_rmatvec(F_col, d)
+for tag, shape in [("flat_1x8", (1, 8)), ("hier_2x4", (2, 4))]:
+    mesh = make_mesh(shape, ("row", "col"))
+    op = FFTMatvec.from_block_column(F_col, mesh=mesh)
+    out_f, out_a, t_f, t_a = bench(op)
+    res[tag] = {"grid": list(shape), "collective": op._collective_kind(("col",)),
+                "t_matvec": t_f, "t_rmatvec": t_a,
+                "err_matvec": rel_l2(out_f, ref_f),
+                "err_rmatvec": rel_l2(out_a, ref_a)}
+res["parity_matvec"] = abs(res["flat_1x8"]["err_matvec"] - res["hier_2x4"]["err_matvec"])
+print(json.dumps(res))
+"""
+
 
 def measured_8dev(results, smoke=False):
     shape = (32, 4, 8 * 32) if smoke else (128, 16, 8 * 200)
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run(
-        [sys.executable, "-c", _MEASURED_CODE % {"shape": repr(shape)}],
-        env=env, capture_output=True, text=True, timeout=560)
-    if out.returncode != 0:
-        row("fig4/measured_8dev", 0.0, f"FAILED:{out.stderr[-120:]}")
-        results["measured_8dev"] = {"error": out.stderr[-400:]}
+    res = _run_measured(_MEASURED_CODE % {"shape": repr(shape)}, results,
+                        "measured_8dev")
+    if res is None:
         return
-    res = json.loads(out.stdout.splitlines()[-1])
+    res["shape"] = list(shape)
     row("fig4/measured_8dev_f64", res["f64"]["t"],
         f"rel_err={res['f64']['err']:.1e}")
     row("fig4/measured_8dev_mixed", res["mixed"]["t"],
         f"rel_err={res['mixed']['err']:.1e};"
         f"speedup={res['f64']['t'] / res['mixed']['t']:.2f}")
-    results["measured_8dev"] = {"shape": list(shape), **res}
+
+
+def measured_grid_vs_flat(results, smoke=False):
+    """The tentpole leg: hierarchical 2x4 vs flat 1x8, measured."""
+    shape = (32, 4, 8 * 32) if smoke else (128, 16, 8 * 200)
+    res = _run_measured(_GRID_VS_FLAT_CODE % {"shape": repr(shape)}, results,
+                        "measured_grid_vs_flat")
+    if res is None:
+        return
+    res["shape"] = list(shape)
+    # the model's view of the same comparison, for the gap analysis
+    net = NetworkModel()
+    res["model_t_flat"] = matvec_comm_time(1, N_DEV, *shape, net=net)
+    res["model_t_grid"] = matvec_comm_time(2, 4, *shape, net=net)
+    for tag in ("flat_1x8", "hier_2x4"):
+        r = res[tag]
+        row(f"fig4/grid_{tag}", r["t_matvec"],
+            f"collective={r['collective']};rmatvec={r['t_rmatvec']:.2e};"
+            f"rel_err={r['err_matvec']:.1e}")
+    row("fig4/grid_vs_flat", res["hier_2x4"]["t_matvec"],
+        f"speedup={res['flat_1x8']['t_matvec'] / res['hier_2x4']['t_matvec']:.2f};"
+        f"parity={res['parity_matvec']:.1e}")
 
 
 def modeled_scaling(results, smoke=False):
@@ -84,6 +170,7 @@ def modeled_scaling(results, smoke=False):
     for p in (8, 64) if smoke else (8, 64, 512, 1024, 2048, 4096):
         Nm = NM_PER * p
         grid = choose_grid(p, N_T, N_D, Nm, net=net)
+        assert grid == paper_grid(p) or p not in (8, 512, 1024, 2048, 4096)
         t_flat = matvec_comm_time(1, p, N_T, N_D, Nm, net=net)
         t_grid = matvec_comm_time(*grid, N_T, N_D, Nm, net=net)
         total_f64 = T_COMPUTE + t_grid
@@ -109,6 +196,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
     results = {"smoke": bool(args.smoke), "model": {}}
     measured_8dev(results, smoke=args.smoke)
+    measured_grid_vs_flat(results, smoke=args.smoke)
     modeled_scaling(results, smoke=args.smoke)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1, sort_keys=True)

@@ -53,8 +53,7 @@ class DispatchTable:
     ``pad_cast_min_cols``  fused Pallas pad+cast only pays off beyond
                            this minor-axis length.
     ``force``              None (auto) or one of "pallas"/"xla"/"ref" —
-                           the legacy ``use_pallas=``/``xla_fused=``
-                           kwargs map onto this.
+                           pins every op to one lowering.
     ``calibrated``         True when the transition points came from
                            measurements rather than the defaults.
     """

@@ -26,9 +26,9 @@ import jax.numpy as jnp
 class UnsupportedOnBackend(TypeError):
     """An *explicitly requested* kernel path cannot run on this backend.
 
-    Raised only for explicit requests (``force="pallas"`` dispatch, the
-    legacy ``use_pallas=True``); automatic dispatch never raises — it
-    falls back to a supported path instead.
+    Raised only for explicit requests (``force="pallas"`` dispatch);
+    automatic dispatch never raises — it falls back to a supported path
+    instead.
     """
 
 

@@ -2,10 +2,10 @@
 
 Public API:
     PrecisionConfig, ExecOpts, FFTMatvec       — mixed-precision matvec (C1+C3)
-                                                 (MatvecOptions = legacy shim)
     pipeline.Stage / matvec_plan / gram_plan   — stage graph + shared executor
     GramOperator (FFTMatvec.gram)              — fused Fourier-domain Gram
     choose_grid / paper_grid                   — comm-aware 2-D partitioning
+                                                 (FFTMatvec mesh="auto")
     pareto.measure_configs / pareto_front      — Pareto analysis (Fig. 3)
     error_model.relative_error_bound           — paper eq. (6)
     GaussianInverseProblem                     — Bayesian-inversion driver
@@ -16,15 +16,18 @@ from .precision import (PrecisionConfig, all_configs, machine_eps,  # noqa: F401
                         DOUBLE, SINGLE, TPU_BASELINE, TPU_FAST,
                         PAPER_OPT_F, PAPER_OPT_FSTAR, PAPER_OPT_F_LARGE,
                         TPU_OPT_F)
-from .pipeline import (ExecOpts, Stage, matvec_plan, gram_plan,  # noqa: F401
-                       run_plan, stage_counts, record_stages)
-from .fftmatvec import FFTMatvec, MatvecOptions, phase_callables  # noqa: F401
+from .pipeline import (ExecOpts, Stage, COLLECTIVE_KINDS,  # noqa: F401
+                       matvec_plan, gram_plan, run_plan, stage_counts,
+                       record_stages)
+from .fftmatvec import FFTMatvec, phase_callables  # noqa: F401
 from .gram import GramOperator  # noqa: F401
 from .toeplitz import (dense_from_block_column, dense_matvec,  # noqa: F401
                        dense_rmatvec, fourier_block_column,
                        random_block_column, random_unrepresentable,
                        heat_equation_p2o)
-from .partition import choose_grid, paper_grid, matvec_comm_time, NetworkModel  # noqa: F401
+from .partition import (choose_grid, paper_grid, matvec_comm_time,  # noqa: F401
+                        hierarchical_collective_time, NetworkModel,
+                        TPU_POD_NETWORK)
 from .error_model import (relative_error_bound, dominant_phase,  # noqa: F401
                           lattice_bounds, phase_factors)
 from .pareto import (ConfigRecord, measure_configs, pareto_front,  # noqa: F401

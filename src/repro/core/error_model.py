@@ -12,9 +12,14 @@ n_d = ceil(N_d / p_r) and p_c by p_r.  e_i is the unit roundoff of the
 precision used in phase i; c_i are O(1) algorithm constants; c1 = 0 when
 Phase 1 runs at (or above) the precision that represents the input exactly.
 
-One deliberate extension over the paper's formula: the reduce term uses
+Two deliberate extensions over the paper's formula: the reduce term uses
 1 + log2(p_c) rather than log2(p_c), because the Phase-5 unpad stores at
-the reduce precision even on a single device (see ``phase_factors``).
+the reduce precision even on a single device (see ``phase_factors``); and
+the two pieces of that term may run at *different* levels — the storage
+cast at the reduce level, the depth-log2(p) reduction tree at an optional
+``comm_level`` (the reduced-precision-communication knob, DESIGN.md §5).
+With ``comm_level=None`` both pieces use the reduce level and the bound
+is exactly the old one.
 """
 
 from __future__ import annotations
@@ -42,11 +47,14 @@ def phase_factors(N_t: int, N_d: int, N_m: int, p_r: int = 1, p_c: int = 1,
     term accumulates both contraction lengths, and the reduction happens
     over both grid axes).
 
-    The reduce factor is ``1 + log2(p)``, not the paper's bare
-    ``log2(p)``: the Phase-5 unpad+cast stores at the reduce level even
-    on a single device (one rounding, measurably nonzero — mirroring how
-    the pad term covers the Phase-1 cast), on top of the depth-``log2(p)``
-    reduction tree.
+    The phase-5 factor is split: ``"reduce"`` is the always-present
+    storage cast (``1.0`` — the Phase-5 unpad+cast stores at the reduce
+    level even on a single device, one rounding, measurably nonzero,
+    mirroring how the pad term covers the Phase-1 cast) and ``"comm"`` is
+    the depth-``log2(p)`` reduction tree, which may run at a different
+    (communication) precision — see :func:`relative_error_bound`'s
+    ``comm_level``.  Their sum at one level is the old ``1 + log2(p)``
+    factor.
     """
     log_nt = math.log2(max(N_t, 2))
     n_m = math.ceil(N_m / max(p_c, 1))
@@ -58,7 +66,8 @@ def phase_factors(N_t: int, N_d: int, N_m: int, p_r: int = 1, p_c: int = 1,
             "fft": 2.0 * log_nt,
             "gemv": float(n_m + n_d),
             "ifft": 2.0 * log_nt,
-            "reduce": 1.0 + (math.log2(p_red) if p_red > 1 else 0.0),
+            "reduce": 1.0,
+            "comm": math.log2(p_red) if p_red > 1 else 0.0,
         }
     if variant is not None and variant not in ("matvec", "rmatvec",
                                                "matmat", "rmatmat"):
@@ -74,7 +83,8 @@ def phase_factors(N_t: int, N_d: int, N_m: int, p_r: int = 1, p_c: int = 1,
         "fft": log_nt,
         "gemv": float(n_local),
         "ifft": log_nt,
-        "reduce": 1.0 + (math.log2(p_red) if p_red > 1 else 0.0),
+        "reduce": 1.0,
+        "comm": math.log2(p_red) if p_red > 1 else 0.0,
     }
 
 
@@ -82,19 +92,25 @@ def relative_error_bound(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
                          p_r: int = 1, p_c: int = 1, *, adjoint: bool = False,
                          kappa: float = 1.0, input_level: str = "d",
                          constants: dict | None = None,
-                         variant: str | None = None) -> float:
+                         variant: str | None = None,
+                         comm_level: str | None = None) -> float:
     """Evaluate eq. (6).  ``input_level`` is the precision at which the
     input vector is exactly representable (paper: double).  ``constants``
     may override the O(1) factors c1..c5 and cF (default 1.0).
     ``variant="gram"`` bounds the fused Gram pipeline: doubled structural
     factors (see :func:`phase_factors`) and a squared condition number —
-    the chained F/F* passes each amplify by kappa(F_hat)."""
+    the chained F/F* passes each amplify by kappa(F_hat).
+    ``comm_level`` is the reduced-precision-communication knob: the
+    depth-``log2(p)`` reduction-tree term uses its unit roundoff instead
+    of the reduce phase's (None = reductions at the reduce level, the old
+    bound exactly)."""
     c = {"c1": 1.0, "c2": 1.0, "c3": 1.0, "c4": 1.0, "c5": 1.0, "cF": 1.0}
     if constants:
         c.update(constants)
 
     e = {p: machine_eps(getattr(cfg, p)) for p in
          ("pad", "fft", "gemv", "ifft", "reduce")}
+    e_comm = machine_eps(comm_level) if comm_level else e["reduce"]
     e_setup = machine_eps(input_level)   # setup FFT of F runs at input level
 
     # c1 = 0 if the pad/broadcast phase is lossless for the input.
@@ -110,7 +126,8 @@ def relative_error_bound(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
                   + c["c2"] * e["fft"] * f["fft"]
                   + c["c4"] * e["ifft"] * f["ifft"]
                   + c["c3"] * e["gemv"] * f["gemv"]
-                  + c["c5"] * e["reduce"] * f["reduce"])
+                  + c["c5"] * (e["reduce"] * f["reduce"]
+                               + e_comm * f["comm"]))
 
 
 def lattice_bounds(configs: Iterable[PrecisionConfig], N_t: int, N_d: int,
@@ -125,10 +142,15 @@ def lattice_bounds(configs: Iterable[PrecisionConfig], N_t: int, N_d: int,
 
 def dominant_phase(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
                    p_r: int = 1, p_c: int = 1, *, adjoint: bool = False,
-                   variant: str | None = None) -> str:
+                   variant: str | None = None,
+                   comm_level: str | None = None) -> str:
     """Which phase contributes the largest term of eq. (6).  The paper:
-    'the dominant error term comes from the SBGEMV in Phase 3'."""
+    'the dominant error term comes from the SBGEMV in Phase 3'.  The
+    reduction tree appears as its own ``"comm"`` term at ``comm_level``
+    (default: the reduce level)."""
     f = phase_factors(N_t, N_d, N_m, p_r, p_c, adjoint=adjoint,
                       variant=variant)
-    terms = {p: machine_eps(getattr(cfg, p)) * f[p] for p in f}
+    eps_of = lambda p: machine_eps(comm_level or cfg.reduce) if p == "comm" \
+        else machine_eps(getattr(cfg, p))
+    terms = {p: eps_of(p) * f[p] for p in f}
     return max(terms, key=terms.get)

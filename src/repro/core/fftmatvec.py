@@ -25,52 +25,74 @@ shard N_d, cols shard N_m.  ``m`` lives sharded over cols / replicated
 over rows; ``d`` sharded over rows / replicated over cols.  For the F
 matvec the only collective is the Phase-5 ``psum`` over cols; for F* it is
 the Phase-1 broadcast over cols (materialized by SPMD when the input is
-not yet replicated) and a ``psum`` over rows.
+not yet replicated) and a ``psum`` over rows.  Either side of the grid may
+map to a *tuple* of mesh axes (slow -> fast order, e.g. cols =
+``("data", "model")``); whenever the grid has more than one row the plans
+emit the *hierarchical* collective form — staged per-tier reductions, the
+executed version of the comm-aware blocking ``core.partition`` models —
+and ``mesh="auto"`` picks the grid itself via :func:`choose_grid`
+(``grid=paper_grid(p)`` is the documented override).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Optional
+import math
+from typing import Optional, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.backend import DispatchTable
 from repro.jax_compat import shard_map
 from . import pipeline
 from . import precision as prec
+from .partition import NetworkModel, choose_grid
 from .pipeline import ExecOpts, reorder_planes  # noqa: F401  (public API)
 from .precision import PrecisionConfig
 from .toeplitz import fourier_block_column
 
+AxisSpec = Union[str, Tuple[str, ...], None]
 
-def MatvecOptions(use_pallas: bool | str = False, interpret: bool = False,
-                  fuse_pad_cast: bool = False, block_n: int = 512,
-                  block_s: int = 128) -> ExecOpts:
-    """Deprecation shim: the old per-call kernel knobs, mapped onto the
-    backend layer.  Construct :class:`repro.core.ExecOpts` directly (a
-    backend name/spec + a :class:`repro.backend.DispatchTable`) — this
-    spelling goes away next release.
 
-    Mapping: ``interpret=True`` -> the ``cpu-interpret`` validation
-    backend; ``use_pallas=True/False/"auto"`` -> a table forcing
-    pallas/xla/auto dispatch; ``fuse_pad_cast``/``block_*`` pass through
-    as ExecOpts overrides.
+def _as_axes(axis: AxisSpec) -> Tuple[str, ...]:
+    """Normalize an axis spec (name, tuple of names, None/()) to a tuple."""
+    if axis is None or axis == ():
+        return ()
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def _auto_mesh(p_shape: Tuple[int, int, int], row_axis, col_axis,
+               devices=None, grid: Optional[Tuple[int, int]] = None,
+               net: Optional[NetworkModel] = None) -> Mesh:
+    """Build the comm-aware 2-D mesh for ``mesh="auto"``.
+
+    ``devices`` is a device count, an explicit device sequence, or None
+    (all local devices); ``grid`` pins (p_r, p_c) — pass
+    ``partition.paper_grid(p)`` for the published Frontier grids — and
+    defaults to :func:`choose_grid` under ``net`` (default
+    :class:`NetworkModel`).
     """
-    warnings.warn("MatvecOptions is deprecated; construct repro.core."
-                  "ExecOpts (backend=/dispatch=) instead",
-                  DeprecationWarning, stacklevel=2)
-    if use_pallas == "auto":
-        dispatch = None
-    elif use_pallas:
-        dispatch = DispatchTable(force="pallas")
+    N_t, N_d, N_m = p_shape
+    if devices is None:
+        devs = jax.devices()
+    elif isinstance(devices, int):
+        devs = jax.devices()
+        if devices > len(devs):
+            raise ValueError(f"mesh='auto' asked for {devices} devices but "
+                             f"only {len(devs)} are visible")
+        devs = devs[:devices]
     else:
-        dispatch = DispatchTable(force="xla")
-    return ExecOpts(backend="cpu-interpret" if interpret else None,
-                    dispatch=dispatch, block_n=block_n, block_s=block_s,
-                    fuse_pad_cast=fuse_pad_cast)
+        devs = list(devices)
+    p = len(devs)
+    if grid is None:
+        grid = choose_grid(p, N_t, N_d, N_m, net=net or NetworkModel())
+    p_r, p_c = grid
+    if p_r * p_c != p:
+        raise ValueError(f"grid {p_r}x{p_c} does not tile {p} devices")
+    if not (isinstance(row_axis, str) and isinstance(col_axis, str)):
+        raise ValueError("mesh='auto' needs single row/col axis names")
+    return Mesh(np.asarray(devs).reshape(p_r, p_c), (row_axis, col_axis))
 
 
 # ---------------------------------------------------------------------------
@@ -137,27 +159,46 @@ class FFTMatvec:
     precision: PrecisionConfig = PrecisionConfig()
     opts: ExecOpts = ExecOpts()
     mesh: Optional[Mesh] = None
-    row_axis: str = "row"
-    col_axis: str = "col"
+    row_axis: AxisSpec = "row"
+    col_axis: AxisSpec = "col"
+    comm_level: Optional[str] = None     # reduction precision (None = reduce)
+    collective: Optional[str] = None     # pipeline.COLLECTIVE_KINDS override
 
     # -- constructors -------------------------------------------------------
     @classmethod
     def from_block_column(cls, F_col, precision=PrecisionConfig(),
                           opts=ExecOpts(), mesh=None,
                           row_axis="row", col_axis="col",
-                          backend=None) -> "FFTMatvec":
+                          backend=None, devices=None, grid=None, net=None,
+                          comm_level=None, collective=None) -> "FFTMatvec":
         """Phase-0 setup (always at the highest precision, paper §3.2.1),
         storing F_hat at the gemv level.  ``backend`` is a convenience
         override folded into ``opts`` (a spec or a registered name such
-        as ``"xla-ref"``)."""
+        as ``"xla-ref"``).
+
+        ``mesh`` is a 2-D device mesh, or ``"auto"``: consult
+        :func:`repro.core.choose_grid` for the comm-aware (p_r, p_c) grid
+        over ``devices`` (a count, a device sequence, or None = all local
+        devices) under ``net`` (default :class:`NetworkModel`), with
+        ``grid`` — e.g. ``paper_grid(p)`` — as the documented override.
+        ``row_axis``/``col_axis`` may be mesh-axis *tuples* (slow -> fast);
+        ``comm_level`` runs the mesh reductions at a reduced precision
+        (one rounding per reduction, carrier dtype restored — DESIGN.md
+        §5) and ``collective`` pins the lowering (default: hierarchical
+        whenever the grid has more than one row)."""
         if backend is not None:
             opts = dataclasses.replace(opts, backend=backend)
+        if isinstance(mesh, str):
+            if mesh != "auto":
+                raise ValueError(f"unknown mesh spec {mesh!r}")
+            mesh = _auto_mesh(F_col.shape, row_axis, col_axis,
+                              devices=devices, grid=grid, net=net)
         F_re, F_im = fourier_block_column(
             F_col, dtype=prec.real_dtype(precision.gemv))
         op = cls(F_re, F_im, F_col.shape[0], precision, opts, mesh,
-                 row_axis, col_axis)
+                 row_axis, col_axis, comm_level, collective)
         if mesh is not None:
-            spec = P(None, row_axis, col_axis)
+            spec = P(None, op._row, op._col)
             op = dataclasses.replace(
                 op,
                 F_hat_re=jax.device_put(F_re, NamedSharding(mesh, spec)),
@@ -185,6 +226,16 @@ class FFTMatvec:
         if dispatch is not None:
             opts = dataclasses.replace(opts, dispatch=dispatch)
         return dataclasses.replace(self, opts=opts)
+
+    def with_comm(self, comm_level: Optional[str],
+                  collective: Optional[str] = None) -> "FFTMatvec":
+        """Same operator with another communication precision and,
+        optionally, another collective lowering (``"psum"`` /
+        ``"hierarchical"`` / ``"reduce_scatter"``).  ``comm_level=None``
+        restores the default (reductions at the reduce level)."""
+        return dataclasses.replace(
+            self, comm_level=comm_level,
+            collective=self.collective if collective is None else collective)
 
     def autotune(self, tol: float, *, full_result: bool = False, **kw):
         """Dynamic mixed-precision selection (paper §3.2 at runtime).
@@ -230,8 +281,51 @@ class FFTMatvec:
 
     @property
     def _row(self):
-        """Row axis (None for the paper's p_r = 1 regime)."""
+        """Row axis spec (None for the paper's p_r = 1 regime)."""
         return self.row_axis if self.row_axis not in ((), None) else None
+
+    @property
+    def _col(self):
+        return self.col_axis if self.col_axis not in ((), None) else None
+
+    def grid_shape(self) -> tuple[int, int]:
+        """(p_r, p_c) of the mesh grid — (1, 1) when single-device.
+
+        A named row/col axis the mesh does not have is a construction
+        error, surfaced here (bound pricing and collective selection both
+        read this) rather than as a late shard_map KeyError — or, worse,
+        a silently flat grid."""
+        if self.mesh is None:
+            return (1, 1)
+        sizes = self.mesh.shape
+        for a in (*_as_axes(self.row_axis), *_as_axes(self.col_axis)):
+            if a not in sizes:
+                raise ValueError(f"grid axis {a!r} is not a mesh axis "
+                                 f"(mesh has {tuple(sizes)})")
+        p_r = math.prod(sizes[a] for a in _as_axes(self.row_axis))
+        p_c = math.prod(sizes[a] for a in _as_axes(self.col_axis))
+        return (max(p_r, 1), max(p_c, 1))
+
+    def _collective_kind(self, psum_axes: Tuple[str, ...]) -> str:
+        """The emitted collective lowering: the explicit override, else
+        hierarchical whenever the grid has > 1 row (the paper's comm-aware
+        regime) or the reduction group spans several mesh tiers."""
+        if self.collective is not None:
+            return self.collective
+        p_r, _ = self.grid_shape()
+        return "hierarchical" if (p_r > 1 or len(psum_axes) > 1) else "psum"
+
+    def _psum_args(self, adjoint: bool) -> dict:
+        """psum stage parameters for one matvec plan on this mesh."""
+        psum_axes = _as_axes(self.row_axis if adjoint else self.col_axis)
+        if not psum_axes:
+            return {"psum_axis": None}
+        sizes = self.mesh.shape
+        return {"psum_axis": psum_axes[0] if len(psum_axes) == 1
+                else psum_axes,
+                "psum_groups": tuple(sizes[a] for a in psum_axes),
+                "collective": self._collective_kind(psum_axes),
+                "comm_level": self.comm_level}
 
     # -- the one apply path ----------------------------------------------------
     def _apply(self, x, *, adjoint: bool):
@@ -246,13 +340,12 @@ class FFTMatvec:
                                   N_t=N_t, opts=opts)
             return y.astype(io_dtype)
 
-        row, col = self._row, self.col_axis
+        row, col = self._row, self._col
         # F: input sharded over cols, reduce over cols, output over rows;
         # F*: roles swapped (psum over rows only when the grid has > 1 row).
         in_axis, out_axis = (row, col) if adjoint else (col, row)
-        psum_axis = row if adjoint else col
         plan = pipeline.matvec_plan(cfg, adjoint=adjoint,
-                                    psum_axis=psum_axis)
+                                    **self._psum_args(adjoint))
 
         def body(F_re, F_im, x_loc):
             y = pipeline.run_plan(plan, x_loc, {"F": (F_re, F_im)},

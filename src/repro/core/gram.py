@@ -46,7 +46,7 @@ from repro.jax_compat import shard_map
 from repro.kernels import ops as kops
 from . import pipeline
 from . import precision as prec
-from .fftmatvec import FFTMatvec
+from .fftmatvec import FFTMatvec, _as_axes
 from .precision import PrecisionConfig
 
 
@@ -156,18 +156,33 @@ class GramOperator:
             return y.astype(self.io_dtype)
 
         op = self.op
-        row, col = op._row, op.col_axis
+        row, col = op._row, op._col
         if self.space == "parameter":
             # F then F*: the forward GEMM is partial over cols (mid psum),
             # the adjoint GEMM partial over rows (final psum, p_r > 1 only).
-            io_axis, mid_axis, out_psum = col, col, row
+            io_axis, mid_axes, out_axes = \
+                col, _as_axes(op.col_axis), _as_axes(op.row_axis)
         else:
             # F* then F: roles swapped; the final psum over cols is always
             # needed, the mid one only when the grid has > 1 row.
-            io_axis, mid_axis, out_psum = row, row, col
+            io_axis, mid_axes, out_axes = \
+                row, _as_axes(op.row_axis), _as_axes(op.col_axis)
+
+        def axspec(axes):
+            return None if not axes else \
+                (axes[0] if len(axes) == 1 else axes)
+
+        sizes = op.mesh.shape
+        groups = lambda axes: tuple(sizes[a] for a in axes) or None
+        widest = mid_axes if len(mid_axes) >= len(out_axes) else out_axes
         plan = pipeline.gram_plan(self.precision, space=self.space,
-                                  mode=self.mode, mid_psum_axis=mid_axis,
-                                  psum_axis=out_psum)
+                                  mode=self.mode,
+                                  mid_psum_axis=axspec(mid_axes),
+                                  psum_axis=axspec(out_axes),
+                                  mid_psum_groups=groups(mid_axes),
+                                  psum_groups=groups(out_axes),
+                                  collective=op._collective_kind(widest),
+                                  comm_level=op.comm_level)
         N_t, opts, io_dtype = self.N_t, self.opts, self.io_dtype
         operands = self._operands
 

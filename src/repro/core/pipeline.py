@@ -50,6 +50,16 @@ from .precision import PrecisionConfig
 STAGE_KINDS = ("pad", "fft", "reorder", "gemv", "ifft", "mask", "unpad",
                "psum")
 
+# How a psum stage lowers (paper §4.2.2 / DESIGN.md §6):
+#   "psum"            one flat all-reduce over the whole axis group
+#   "hierarchical"    staged per-axis reduction, fast (minor) tier first —
+#                     the executed form of the paper's comm-aware blocking
+#   "reduce_scatter"  reduce-scatter + all-gather decomposition of the
+#                     flat all-reduce (bandwidth-optimal for large rows);
+#                     falls back to flat psum when the carrier's leading
+#                     dim does not tile over the group
+COLLECTIVE_KINDS = ("psum", "hierarchical", "reduce_scatter")
+
 
 # ---------------------------------------------------------------------------
 # Execution options: which backend lowers the plan, and per-stage overrides.
@@ -59,11 +69,10 @@ STAGE_KINDS = ("pad", "fft", "reorder", "gemv", "ifft", "mask", "unpad",
 class ExecOpts:
     """How a plan lowers: a backend + a dispatch table + stage overrides.
 
-    This replaced the old ``MatvecOptions`` kwarg tangle
-    (``use_pallas``/``interpret``/``fuse_pad_cast``/``block_*`` threaded
-    through every call site): kernel selection is now a property of the
-    :mod:`repro.backend` layer, consulted once per stage at plan-lowering
-    (trace) time.
+    Kernel selection is a property of the :mod:`repro.backend` layer,
+    consulted once per stage at plan-lowering (trace) time — never
+    per-call-site flags (the old ``use_pallas``/``interpret``/``block_*``
+    kwarg tangle and its ``MatvecOptions`` shim are gone).
 
     ``backend``        a :class:`repro.backend.BackendSpec`, a registered
                        name ("tpu-pallas", "xla-ref", ...), or None — the
@@ -118,13 +127,23 @@ def _resolved(opts) -> ResolvedOpts:
 class Stage:
     """One pipeline stage: what to run, at which precision, on what layout.
 
-    ``kind``     one of :data:`STAGE_KINDS`.
-    ``level``    precision level ("h"/"s"/"d") the stage computes/stores at.
-    ``adjoint``  gemv: conjugate-transpose flavor (F* pipelines).
-    ``to_tosi``  reorder direction (SOTI -> TOSI or back).
-    ``operand``  which operator planes feed a gemv stage ("F" for the
-                 Fourier block column, "G" for precomputed Gram blocks).
-    ``axis``     psum: mesh axis name to reduce over.
+    ``kind``       one of :data:`STAGE_KINDS`.
+    ``level``      precision level ("h"/"s"/"d") the stage computes/stores
+                   at.  For a psum stage this is the *communication*
+                   precision: the reduction runs at it, but the carrier
+                   dtype is restored afterwards (DESIGN.md §5) — a low
+                   comm level is one rounding event per reduction, never a
+                   downgrade of the downstream pipeline.
+    ``adjoint``    gemv: conjugate-transpose flavor (F* pipelines).
+    ``to_tosi``    reorder direction (SOTI -> TOSI or back).
+    ``operand``    which operator planes feed a gemv stage ("F" for the
+                   Fourier block column, "G" for precomputed Gram blocks).
+    ``axis``       psum: mesh axis name — or a *tuple* of names, ordered
+                   slow (outer tier) to fast (minor tier) — to reduce over.
+    ``collective`` psum: lowering kind (:data:`COLLECTIVE_KINDS`).
+    ``groups``     psum: static device count per axis in ``axis`` (tuple,
+                   same order).  Optional; lets the reduce-scatter lowering
+                   check tiling divisibility at trace time.
     """
 
     kind: str
@@ -132,13 +151,26 @@ class Stage:
     adjoint: bool = False
     to_tosi: bool = True
     operand: str = "F"
-    axis: Optional[str] = None
+    axis: Union[str, Tuple[str, ...], None] = None
+    collective: str = "psum"
+    groups: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         if self.kind not in STAGE_KINDS:
             raise ValueError(f"unknown stage kind {self.kind!r}")
         if self.level not in ("h", "s", "d"):
             raise ValueError(f"bad precision level {self.level!r}")
+        if self.collective not in COLLECTIVE_KINDS:
+            raise ValueError(f"unknown collective kind {self.collective!r}")
+        if self.groups is not None and len(self.groups) != len(self.axes):
+            raise ValueError("groups must match the psum axis tuple")
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        """The psum axis group as a tuple (slow -> fast order)."""
+        if self.axis is None:
+            return ()
+        return (self.axis,) if isinstance(self.axis, str) else self.axis
 
 
 Plan = Tuple[Stage, ...]
@@ -241,13 +273,66 @@ def _unpad(stage, x, operands, N_t, S, opts):
                            fuse=opts.fuse_pad_cast)
 
 
+def _collective_count(stage) -> int:
+    """How many collective launches this psum stage lowers to (per carrier
+    plane) — what :func:`record_stages` reports as ``collective:*`` keys."""
+    if stage.collective == "hierarchical":
+        return len(stage.axes)
+    if stage.collective == "reduce_scatter":
+        # reduce-scatter + all-gather, plus one flat psum across the outer
+        # tiers when the group spans several mesh axes
+        return 2 + (1 if len(stage.axes) > 1 else 0)
+    return 1
+
+
+def _reduce_scatter_all_reduce(q, axes):
+    """All-reduce as reduce-scatter + all-gather over the minor (fast)
+    axis, with a flat psum across any outer tiers in between.  The caller
+    has already checked that the leading carrier dim tiles over the minor
+    group (and falls back to the flat psum when it does not)."""
+    minor = axes[-1]
+    q = jax.lax.psum_scatter(q, minor, scatter_dimension=0, tiled=True)
+    if len(axes) > 1:
+        q = jax.lax.psum(q, axes[:-1])
+    return jax.lax.all_gather(q, minor, axis=0, tiled=True)
+
+
 def _psum(stage, x, operands, N_t, S, opts):
-    # Mesh reduction at the stage's level (lower-precision comm is a paper
-    # knob).  Works on either carrier: a plane pair psums plane-wise.
-    dt = prec.real_dtype(stage.level)
+    # Mesh reduction at the stage's *communication* level (reduced-
+    # precision comm is the survey's next lever once compute is mixed).
+    # The carrier dtype is restored after the collective: the old code
+    # left the carrier at the comm dtype, silently downgrading every
+    # downstream stage whenever the comm level sat below the pipeline's
+    # (DESIGN.md §5).  Works on either carrier: a plane pair reduces
+    # plane-wise.
+    axes = stage.axes
+    comm_dt = prec.real_dtype(stage.level)
+    minor_group = stage.groups[-1] if stage.groups else None
+    lead = (x[0] if isinstance(x, tuple) else x).shape[0]
+    rs_ok = (stage.collective == "reduce_scatter"
+             and minor_group is not None and lead % minor_group == 0)
+
+    def reduce_one(p):
+        carrier_dt = p.dtype
+        q = p.astype(comm_dt)
+        if stage.collective == "hierarchical":
+            # fast (minor) tier first, then outward — the executed form of
+            # the paper's within-row-then-across-rows blocking
+            for ax in reversed(axes):
+                q = jax.lax.psum(q, ax)
+        elif rs_ok:
+            q = _reduce_scatter_all_reduce(q, axes)
+        else:
+            q = jax.lax.psum(q, axes)
+        return q.astype(carrier_dt)
+
+    n_coll = _collective_count(stage) \
+        if stage.collective != "reduce_scatter" or rs_ok else 1
+    for counter in _active_counters:
+        counter[f"collective:{stage.collective}"] += n_coll
     if isinstance(x, tuple):
-        return tuple(jax.lax.psum(p.astype(dt), stage.axis) for p in x)
-    return jax.lax.psum(x.astype(dt), stage.axis)
+        return tuple(reduce_one(p) for p in x)
+    return reduce_one(x)
 
 
 _STAGE_IMPLS = {"pad": _pad, "fft": _fft, "reorder": _reorder, "gemv": _gemv,
@@ -265,10 +350,14 @@ _active_counters: list = []
 def record_stages() -> Iterator[collections.Counter]:
     """Count stages as the executor runs them.
 
-    Yields a ``Counter`` mapping stage kind -> executions.  Counting happens
-    when the executor's Python loop runs — i.e. every call for eager
-    pipelines, once per trace under ``jit`` — so tests run the operators
-    un-jitted inside this context.
+    Yields a ``Counter`` mapping stage kind -> executions.  Psum stages
+    additionally report their collective launches under
+    ``"collective:<kind>"`` keys (e.g. a two-stage hierarchical reduction
+    counts 2 under ``"collective:hierarchical"``) — this is how the
+    hierarchical lowering is verified rather than asserted.  Counting
+    happens when the executor's Python loop runs — i.e. every call for
+    eager pipelines, once per trace under ``jit`` — so tests run the
+    operators un-jitted inside this context.
     """
     counter: collections.Counter = collections.Counter()
     _active_counters.append(counter)
@@ -320,13 +409,26 @@ def run_plan(plan: Plan, x, operands: Mapping, *, N_t: int, opts):
 # Plan builders
 # ---------------------------------------------------------------------------
 
+def _psum_stage(level: str, axis, collective: str,
+                groups: Optional[Tuple[int, ...]],
+                comm_level: Optional[str]) -> Stage:
+    return Stage("psum", comm_level or level, axis=axis,
+                 collective=collective, groups=groups)
+
+
 def matvec_plan(cfg: PrecisionConfig, *, adjoint: bool = False,
-                psum_axis: Optional[str] = None, operand: str = "F") -> Plan:
+                psum_axis=None, operand: str = "F",
+                collective: str = "psum",
+                psum_groups: Optional[Tuple[int, ...]] = None,
+                comm_level: Optional[str] = None) -> Plan:
     """The 5-phase matvec pipeline as a plan (paper §2.4).
 
     Forward (``d = F m``) and adjoint (``m = F* d``) differ only in the
     gemv stage's conjugate-transpose flag; the distributed version appends
-    a Psum stage over the mesh axis the local contraction was partial in.
+    a Psum stage over the mesh axis — or slow-to-fast axis *tuple* — the
+    local contraction was partial in, lowered per ``collective``
+    (:data:`COLLECTIVE_KINDS`) at ``comm_level`` (None = the reduce
+    level).  ``psum_groups`` carries the static device count per axis.
     ``operand`` selects the planes the gemv stage contracts against (the
     circulant Gram plan is this same pipeline over the "G" blocks).
     """
@@ -340,13 +442,17 @@ def matvec_plan(cfg: PrecisionConfig, *, adjoint: bool = False,
         Stage("unpad", cfg.reduce),
     ]
     if psum_axis is not None:
-        stages.append(Stage("psum", cfg.reduce, axis=psum_axis))
+        stages.append(_psum_stage(cfg.reduce, psum_axis, collective,
+                                  psum_groups, comm_level))
     return tuple(stages)
 
 
 def gram_plan(cfg: PrecisionConfig, *, space: str = "parameter",
-              mode: str = "exact", mid_psum_axis: Optional[str] = None,
-              psum_axis: Optional[str] = None) -> Plan:
+              mode: str = "exact", mid_psum_axis=None, psum_axis=None,
+              collective: str = "psum",
+              mid_psum_groups: Optional[Tuple[int, ...]] = None,
+              psum_groups: Optional[Tuple[int, ...]] = None,
+              comm_level: Optional[str] = None) -> Plan:
     """The fused Fourier-domain Gram pipeline (Hessian actions, Remark 1).
 
     ``space="parameter"`` builds F*F (CGNR's normal operator),
@@ -366,12 +472,18 @@ def gram_plan(cfg: PrecisionConfig, *, space: str = "parameter",
     Toeplitz normal operator, exact only up to the truncation wrap term —
     use it as a preconditioner or for screening, not where the composed
     operator's value is required.
+
+    ``collective``/``comm_level``/``*_groups`` parameterize both Psum
+    stages exactly as in :func:`matvec_plan` (the mid reduction defaults
+    to the reorder level between the gemv it completes and the ifft).
     """
     if space not in ("parameter", "data"):
         raise ValueError(f"unknown gram space {space!r}")
     if mode == "circulant":
         # the matvec pipeline verbatim, contracting the per-bin G blocks
-        return matvec_plan(cfg, psum_axis=psum_axis, operand="G")
+        return matvec_plan(cfg, psum_axis=psum_axis, operand="G",
+                           collective=collective, psum_groups=psum_groups,
+                           comm_level=comm_level)
     if mode != "exact":
         raise ValueError(f"unknown gram mode {mode!r}")
     # exact: parameter space runs F then F* (first gemv forward), data space
@@ -385,7 +497,8 @@ def gram_plan(cfg: PrecisionConfig, *, space: str = "parameter",
         Stage("gemv", cfg.gemv, adjoint=first_adjoint),
     ]
     if mid_psum_axis is not None:
-        stages.append(Stage("psum", mid_level, axis=mid_psum_axis))
+        stages.append(_psum_stage(mid_level, mid_psum_axis, collective,
+                                  mid_psum_groups, comm_level))
     stages += [
         Stage("reorder", mid_level, to_tosi=False),
         Stage("ifft", cfg.ifft),
@@ -398,5 +511,6 @@ def gram_plan(cfg: PrecisionConfig, *, space: str = "parameter",
         Stage("unpad", cfg.reduce),
     ]
     if psum_axis is not None:
-        stages.append(Stage("psum", cfg.reduce, axis=psum_axis))
+        stages.append(_psum_stage(cfg.reduce, psum_axis, collective,
+                                  psum_groups, comm_level))
     return tuple(stages)

@@ -42,3 +42,25 @@ def set_mesh(mesh):
     if hasattr(jax, "set_mesh"):
         return jax.set_mesh(mesh)
     return mesh
+
+
+def forced_host_devices_env(n: int, base_env=None) -> dict:
+    """Environment for a subprocess that must see ``n`` forced host
+    devices, with this repo's ``src`` importable.
+
+    Both variables are *extended*, never clobbered: the device-count flag
+    is appended to any inherited ``XLA_FLAGS`` (appended last so it wins
+    on conflict) and ``src`` is prepended to any inherited ``PYTHONPATH``
+    — environments that deliver JAX or runtime flags through either
+    variable (the pinned container does) keep working.  The shared
+    helper for ``tests/test_distributed.py`` and the fig4 bench.
+    """
+    import os
+    env = dict(os.environ if base_env is None else base_env)
+    flag = f"--xla_force_host_platform_device_count={n}"
+    inherited = env.get("XLA_FLAGS")
+    env["XLA_FLAGS"] = f"{inherited} {flag}" if inherited else flag
+    src = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    prior = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = f"{src}{os.pathsep}{prior}" if prior else src
+    return env

@@ -20,15 +20,14 @@ Pallas without an f64 datapath, or no Pallas at all — raises
 :class:`repro.backend.UnsupportedOnBackend`; automatic dispatch falls
 back to the XLA path instead.
 
-The legacy ``use_pallas=/interpret=/xla_fused=`` kwargs remain as a
-one-release deprecation shim mapping onto (backend, dispatch) — see
-:func:`resolve_backend_dispatch`.
+The legacy ``use_pallas=/interpret=/xla_fused=`` kwargs (and their
+one-release deprecation shim) are gone: kernel selection is expressed
+only through ``backend=``/``dispatch=`` — the interpret-mode Pallas
+spelling is ``backend="cpu-interpret"`` +
+``dispatch=DispatchTable(force="pallas")``.
 """
 
 from __future__ import annotations
-
-import dataclasses
-import warnings
 
 import jax.numpy as jnp
 
@@ -44,47 +43,15 @@ from .padding import pad_planes, pad_to_multiple, round_up
 # Back-compat alias: the transition point now lives in DispatchTable.
 SHORT_WIDE_RATIO = DEFAULT_SHORT_WIDE_RATIO
 
-_UNSET = object()
 
-_DEPRECATION = ("the use_pallas/interpret/xla_fused kwargs are deprecated; "
-                "pass backend=/dispatch= (see repro.backend) — the legacy "
-                "spelling will be removed next release")
+def resolve_backend_dispatch(backend=None, dispatch=None):
+    """Resolve ``(BackendSpec, DispatchTable)``.
 
-
-def resolve_backend_dispatch(backend=None, dispatch=None, *,
-                             use_pallas=_UNSET, interpret=_UNSET,
-                             xla_fused=_UNSET):
-    """Resolve ``(BackendSpec, DispatchTable)``, absorbing legacy kwargs.
-
-    The deprecation shim maps the old flags onto the new layer:
-    ``interpret=True`` -> a Pallas-interpret view of the current spec;
-    ``use_pallas=True/False/"auto"`` -> ``force="pallas"/"xla"/None``;
-    ``xla_fused=False`` -> ``force="ref"``.  An explicit ``dispatch=``
-    wins over the legacy force flags.
+    ``backend`` is a :class:`repro.backend.BackendSpec`, a registered
+    name, or None (the probed process backend, ``REPRO_BACKEND``
+    override applies); ``dispatch`` defaults to the backend's table.
     """
     spec = resolve_backend(backend)
-    legacy = {k: v for k, v in (("use_pallas", use_pallas),
-                                ("interpret", interpret),
-                                ("xla_fused", xla_fused))
-              if v is not _UNSET}
-    if legacy:
-        warnings.warn(_DEPRECATION, DeprecationWarning, stacklevel=3)
-        if legacy.get("interpret"):
-            spec = dataclasses.replace(spec, pallas=True,
-                                       pallas_interpret=True,
-                                       reference=False)
-        up = legacy.get("use_pallas", _UNSET)
-        if dispatch is None:
-            # precedence mirrors the old call sites: an explicit
-            # use_pallas=True always won before xla_fused was consulted.
-            # On a backend without Pallas the force now raises a clear
-            # UnsupportedOnBackend instead of dying in Mosaic lowering.
-            if up is True:
-                dispatch = DispatchTable(force="pallas")
-            elif legacy.get("xla_fused") is False:
-                dispatch = DispatchTable(force="ref")
-            elif up is False:
-                dispatch = DispatchTable(force="xla")
     if dispatch is None:
         dispatch = default_table(spec)
     return spec, dispatch
@@ -120,20 +87,17 @@ def _sbgemv_xla_fused(A_re, A_im, x_re, x_im, mode: str):
 
 
 def sbgemv(A_re, A_im, x_re, x_im, mode: str = "N", *, out_dtype=None,
-           backend=None, dispatch=None, block_n: int | None = None,
-           use_pallas=_UNSET, interpret=_UNSET, xla_fused=_UNSET):
+           backend=None, dispatch=None, block_n: int | None = None):
     """Strided-batched complex GEMV on split planes, backend-dispatched.
 
     A planes (B, m, n); mode "N": x (B, n) -> y (B, m); "T"/"H": x (B, m)
     -> y (B, n).  Returns (y_re, y_im) in ``out_dtype`` (default: A dtype).
     ``backend``/``dispatch`` select the lowering (None = probed backend /
-    its default table); the trailing kwargs are the deprecation shim.
+    its default table).
     """
     B, m, n = A_re.shape
     out_dtype = out_dtype or A_re.dtype
-    spec, table = resolve_backend_dispatch(
-        backend, dispatch, use_pallas=use_pallas, interpret=interpret,
-        xla_fused=xla_fused)
+    spec, table = resolve_backend_dispatch(backend, dispatch)
     path = table.gemv_path(m, n, mode, A_re.dtype, spec)
     if path != "pallas":
         fn = _ref.sbgemv_complex_ref if path == "ref" else _sbgemv_xla_fused
@@ -161,13 +125,11 @@ def sbgemv(A_re, A_im, x_re, x_im, mode: str = "N", *, out_dtype=None,
 
 
 def sbgemv_real(A, x, mode: str = "N", *, out_dtype=None,
-                backend=None, dispatch=None, block_n: int | None = None,
-                use_pallas=_UNSET, interpret=_UNSET):
+                backend=None, dispatch=None, block_n: int | None = None):
     """Real strided-batched GEMV with the same dispatch logic."""
     B, m, n = A.shape
     out_dtype = out_dtype or A.dtype
-    spec, table = resolve_backend_dispatch(
-        backend, dispatch, use_pallas=use_pallas, interpret=interpret)
+    spec, table = resolve_backend_dispatch(backend, dispatch)
     path = table.gemv_path(m, n, mode, A.dtype, spec)
     if path != "pallas":
         return _ref.sbgemv_real_ref(A, x, mode).astype(out_dtype)
@@ -186,7 +148,7 @@ def sbgemv_real(A, x, mode: str = "N", *, out_dtype=None,
 
 
 def pad_cast(x, pad_to: int, out_dtype, *, backend=None, dispatch=None,
-             fuse: bool | None = None, use_pallas=_UNSET, interpret=_UNSET):
+             fuse: bool | None = None):
     """(R, T) -> (R, pad_to) fused zero-pad + cast (Phase-1 memory op).
 
     ``fuse`` pins the fused-Pallas-kernel decision (None consults the
@@ -194,11 +156,7 @@ def pad_cast(x, pad_to: int, out_dtype, *, backend=None, dispatch=None,
     honor (f64, no Pallas) silently takes the reference path — this is a
     memory op, the numerics are identical either way.
     """
-    spec, table = resolve_backend_dispatch(
-        backend, dispatch, interpret=interpret)
-    if use_pallas is not _UNSET:
-        warnings.warn(_DEPRECATION, DeprecationWarning, stacklevel=2)
-        fuse = bool(use_pallas)
+    spec, table = resolve_backend_dispatch(backend, dispatch)
     if not table.fuse_pad_cast(x.shape[-1], x.dtype, out_dtype, spec,
                                prefer=fuse):
         return _ref.pad_cast_ref(x, pad_to, out_dtype)
@@ -209,14 +167,9 @@ def pad_cast(x, pad_to: int, out_dtype, *, backend=None, dispatch=None,
 
 
 def unpad_cast(x, keep: int, out_dtype, *, backend=None, dispatch=None,
-               fuse: bool | None = None, use_pallas=_UNSET,
-               interpret=_UNSET):
+               fuse: bool | None = None):
     """(R, P) -> (R, keep) fused unpad + cast (Phase-5 memory op)."""
-    spec, table = resolve_backend_dispatch(
-        backend, dispatch, interpret=interpret)
-    if use_pallas is not _UNSET:
-        warnings.warn(_DEPRECATION, DeprecationWarning, stacklevel=2)
-        fuse = bool(use_pallas)
+    spec, table = resolve_backend_dispatch(backend, dispatch)
     if not table.fuse_pad_cast(x.shape[-1], x.dtype, out_dtype, spec,
                                prefer=fuse):
         return _ref.unpad_cast_ref(x, keep, out_dtype)
@@ -250,8 +203,7 @@ def _sbgemm_xla_fused(A_re, A_im, X_re, X_im, mode: str):
 
 def sbgemm(A_re, A_im, X_re, X_im, mode: str = "N", *, out_dtype=None,
            backend=None, dispatch=None, block_n: int | None = None,
-           block_s: int | None = None, use_pallas=_UNSET, interpret=_UNSET,
-           xla_fused=_UNSET):
+           block_s: int | None = None):
     """Strided-batched complex GEMM (multi-RHS GEMV) on split planes.
 
     A planes (B, m, n); mode "N": X (B, n, S) -> Y (B, m, S); "T"/"H":
@@ -262,9 +214,7 @@ def sbgemm(A_re, A_im, X_re, X_im, mode: str = "N", *, out_dtype=None,
     B, m, n = A_re.shape
     S = X_re.shape[2]
     out_dtype = out_dtype or A_re.dtype
-    spec, table = resolve_backend_dispatch(
-        backend, dispatch, use_pallas=use_pallas, interpret=interpret,
-        xla_fused=xla_fused)
+    spec, table = resolve_backend_dispatch(backend, dispatch)
     path = table.gemv_path(m, n, mode, A_re.dtype, spec)
     if path != "pallas":
         fn = _ref.sbgemm_complex_ref if path == "ref" else _sbgemm_xla_fused
@@ -294,8 +244,7 @@ def sbgemm(A_re, A_im, X_re, X_im, mode: str = "N", *, out_dtype=None,
 
 
 def sbgemm_gram(A_re, A_im, *, space: str = "parameter", out_dtype=None,
-                backend=None, dispatch=None, block_n: int | None = None,
-                use_pallas=_UNSET, interpret=_UNSET):
+                backend=None, dispatch=None, block_n: int | None = None):
     """Per-bin Hermitian Gram blocks: G[k] = A[k]^H A[k] ("parameter") or
     A[k] A[k]^H ("data") on split planes, with the same dispatch logic as
     the GEMV/GEMM paths.
@@ -316,8 +265,7 @@ def sbgemm_gram(A_re, A_im, *, space: str = "parameter", out_dtype=None,
         m, n = n, m
     elif space != "parameter":
         raise ValueError(f"bad gram space {space!r}")
-    spec, table = resolve_backend_dispatch(
-        backend, dispatch, use_pallas=use_pallas, interpret=interpret)
+    spec, table = resolve_backend_dispatch(backend, dispatch)
     path = table.gemv_path(m, n, "H", A_re.dtype, spec)
     if path != "pallas":
         G_re, G_im = _ref.sbgemm_gram_ref(A_re, A_im, "parameter")
@@ -336,14 +284,12 @@ def sbgemm_gram(A_re, A_im, *, space: str = "parameter", out_dtype=None,
 
 def sbgemm_real(A, X, mode: str = "N", *, out_dtype=None,
                 backend=None, dispatch=None, block_n: int | None = None,
-                block_s: int | None = None, use_pallas=_UNSET,
-                interpret=_UNSET):
+                block_s: int | None = None):
     """Real strided-batched GEMM with the same dispatch logic."""
     B, m, n = A.shape
     S = X.shape[2]
     out_dtype = out_dtype or A.dtype
-    spec, table = resolve_backend_dispatch(
-        backend, dispatch, use_pallas=use_pallas, interpret=interpret)
+    spec, table = resolve_backend_dispatch(backend, dispatch)
     path = table.gemv_path(m, n, mode, A.dtype, spec)
     if path != "pallas":
         return _ref.sbgemm_real_ref(A, X, mode).astype(out_dtype)

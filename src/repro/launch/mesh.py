@@ -8,6 +8,8 @@ import; tests and benches see the real single device.
 
 from __future__ import annotations
 
+import math
+
 import jax
 
 from repro.jax_compat import make_mesh
@@ -34,12 +36,36 @@ def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     return make_mesh(shape, axes)
 
 
-def fftmatvec_grid(mesh):
-    """Map the production mesh onto FFTMatvec's 2-D (row, col) grid,
-    following the paper's comm-aware regime (p_r = 1 up to 512 devices;
-    rows only across slow tiers): single-pod -> 1 x 256 (cols over
-    data+model); multi-pod -> rows = pod (N_d=100 divides 2), cols =
-    data x model.  Returns (row_axes, col_axes) tuples (row may be empty)."""
-    if "pod" in mesh.axis_names:
-        return ("pod",), ("data", "model")
-    return (), ("data", "model")
+def fftmatvec_grid(mesh, *, N_t: int = 1000, N_d: int = 100,
+                   n_m_per_device: int = 5000, net=None):
+    """Map a mesh onto FFTMatvec's 2-D (row, col) grid — the same comm
+    model :func:`repro.core.choose_grid` brute-forces, restricted to the
+    grids this mesh can realize.
+
+    A mesh with axes ``(a1, .., ak)`` realizes exactly the grids whose row
+    group is a leading axis run (rows = ``axes[:k]``, cols = the rest; the
+    outer axes are the slow tiers).  The split minimizing
+    :func:`repro.core.matvec_comm_time` under ``net`` (default
+    :data:`repro.core.TPU_POD_NETWORK` — ICI pod vs DCN, the TPU analogue
+    of the paper's intra-rack fabric vs Slingshot) wins: single-pod 256
+    chips stay flat (one fast domain), the 2x16x16 multi-pod mesh goes
+    hierarchical with rows = ``("pod",)``.  Shape defaults are the
+    weak-scaled paper workload (N_m = 5000 per device).  Returns
+    ``(row_axes, col_axes)`` name tuples (row may be empty)."""
+    from repro.core import TPU_POD_NETWORK, matvec_comm_time
+    net = net or TPU_POD_NETWORK
+    sizes = mesh.devices.shape
+    axes = tuple(mesh.axis_names)
+    p = math.prod(sizes)
+    if p <= net.flat_grid_max:          # choose_grid's flat regime
+        return (), axes
+    N_m = n_m_per_device * p
+    best, best_t = 0, float("inf")
+    for k in range(len(axes)):          # rows = axes[:k], cols = axes[k:]
+        p_r = math.prod(sizes[:k]) if k else 1
+        if p_r > min(p, N_d):           # a row without sensors does no work
+            break
+        t = matvec_comm_time(p_r, p // p_r, N_t, N_d, N_m, net=net)
+        if t < best_t - 1e-15:
+            best, best_t = k, t
+    return axes[:best], axes[best:]

@@ -26,8 +26,8 @@ from .lsqr import lsqr  # noqa: F401
 from repro.core.error_model import relative_error_bound as _bound
 
 
-def error_floor(op, *, p_r: int = 1, p_c: int = 1, kappa: float = 1.0,
-                safety: float = 10.0) -> float:
+def error_floor(op, *, p_r: int | None = None, p_c: int | None = None,
+                kappa: float = 1.0, safety: float = 10.0) -> float:
     """Achievable relative-residual floor for Krylov iterations driven by
     a mixed-precision FFTMatvec.
 
@@ -36,8 +36,22 @@ def error_floor(op, *, p_r: int = 1, p_c: int = 1, kappa: float = 1.0,
     residual can be pushed: below ``safety * max(bound_F, bound_F*)`` the
     recurrence only accumulates operator rounding noise.  Use
     ``max(tol, error_floor(op))`` as the practical stopping target.
+
+    The operator's mesh grid and reduced-precision-communication level
+    (``FFTMatvec.comm_level``) are priced automatically; explicit
+    ``p_r``/``p_c`` — including an explicit (1, 1) — override the grid
+    read off the mesh.
     """
     cfg = op.precision
-    bf = _bound(cfg, op.N_t, op.N_d, op.N_m, p_r=p_r, p_c=p_c)
-    ba = _bound(cfg, op.N_t, op.N_d, op.N_m, p_r=p_r, p_c=p_c, adjoint=True)
+    if (p_r is None or p_c is None) \
+            and getattr(op, "mesh", None) is not None:
+        grid = op.grid_shape()
+        p_r = grid[0] if p_r is None else p_r
+        p_c = grid[1] if p_c is None else p_c
+    p_r, p_c = p_r or 1, p_c or 1
+    comm = getattr(op, "comm_level", None)
+    bf = _bound(cfg, op.N_t, op.N_d, op.N_m, p_r=p_r, p_c=p_c,
+                comm_level=comm)
+    ba = _bound(cfg, op.N_t, op.N_d, op.N_m, p_r=p_r, p_c=p_c, adjoint=True,
+                comm_level=comm)
     return safety * kappa * max(bf, ba)

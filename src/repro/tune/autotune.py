@@ -91,8 +91,9 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
              repeats: int = 5, warmup: int = 2, mode: str = "throughput",
              timer=None, cache: TuningCache | None = None,
              cache_path=None, slack: float = 8.0, kappa: float = 1.0,
-             constants: dict | None = None, p_r: int = 1, p_c: int = 1,
-             n_rhs: int = 4, seed: int = 0) -> TuneResult:
+             constants: dict | None = None, p_r: int | None = None,
+             p_c: int | None = None, n_rhs: int = 4,
+             seed: int = 0) -> TuneResult:
     """Pick the fastest precision config of ``op`` meeting ``tol``.
 
     ``op`` should be the *highest-precision* operator (its stored Fourier
@@ -120,6 +121,17 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
     ladder = tuple(ladder)
     adjoint = variant in _ADJOINT_VARIANTS
     model_variant = variant if variant == "gram" else None
+    # the comm-precision knob lives on the operator; the model prices it
+    # and the cache keys on it (a reduced-precision-comm tune must never
+    # answer a full-precision query).  Grid defaults come off the op's
+    # mesh; explicit p_r/p_c — including an explicit (1, 1) — override.
+    comm_level = getattr(op, "comm_level", None)
+    if (p_r is None or p_c is None) \
+            and getattr(op, "mesh", None) is not None:
+        grid = op.grid_shape()
+        p_r = grid[0] if p_r is None else p_r
+        p_c = grid[1] if p_c is None else p_c
+    p_r, p_c = p_r or 1, p_c or 1
     lattice = list(all_configs(ladder))
     top = max_level(ladder)
     base_cfg = PrecisionConfig(*([top] * 5))
@@ -143,7 +155,8 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
             is not None
         key = CacheKey.for_operator(op, ladder, variant, mode=key_mode,
                                     n_rhs=n_rhs_eff, input_tag=input_tag,
-                                    synthetic_timer=synthetic)
+                                    synthetic_timer=synthetic,
+                                    comm_level=comm_level)
     if cache is not None:
         cached = cache.lookup_config(key, tol)
         if cached is not None:
@@ -189,7 +202,7 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
     report = prune_lattice(lattice, tol, op.N_t, op.N_d, op.N_m, p_r=p_r,
                            p_c=p_c, adjoint=adjoint, variant=model_variant,
                            kappa=kappa, input_level=top, constants=constants,
-                           slack=slack)
+                           slack=slack, comm_level=comm_level)
 
     # 4. frontier search: cheapest-first, dominated-by-measured-feasible
     #    skipped, measured error decides the rest.

@@ -78,7 +78,8 @@ class CacheKey:
                      variant: str = "matvec", device=None, *,
                      mode: str = "throughput",
                      n_rhs: int | None = None, input_tag: str = "",
-                     synthetic_timer: bool = False) -> "CacheKey":
+                     synthetic_timer: bool = False,
+                     comm_level: str | None = None) -> "CacheKey":
         if device is None:
             device = jax.devices()[0]
         kind = f"{device.platform}:{getattr(device, 'device_kind', '')}"
@@ -87,6 +88,10 @@ class CacheKey:
                   f"bs={r.block_s};mode={mode}")
         if variant in ("matmat", "rmatmat"):
             detail += f";S={n_rhs}"
+        if comm_level is not None:
+            # the reduced-precision-communication knob changes both the
+            # measured numbers and their error reference
+            detail += f";comm={comm_level}"
         if input_tag:
             detail += f";in={input_tag}"
         if synthetic_timer:

@@ -67,16 +67,24 @@ def calibrate_constants(probe_errors: Mapping[str, Mapping[str, float]],
     the autotuner compensates with a slack factor on the cutoff and a
     measured-error recheck of every surviving candidate.  Phases with no
     usable probe (missing from ``probe_errors``, or a zero structural
-    factor) keep their default constant."""
+    factor) keep their default constant.
+
+    The reduce probe's error covers BOTH pieces of the split phase-5
+    factor — the storage cast and the depth-log2(p) comm tree run at the
+    probed level together — so c5 is fitted against their sum; fitting
+    against the storage factor alone would inflate c5 by (1 + log2 p) and
+    double-count the tree when the bound re-multiplies by it."""
     c = {"c1": 1.0, "c2": 1.0, "c3": 1.0, "c4": 1.0, "c5": 1.0, "cF": 1.0}
     if defaults:
         c.update(defaults)
     f = phase_factors(N_t, N_d, N_m, p_r, p_c, adjoint=adjoint,
                       variant=variant)
     for phase, name in PHASE_CONSTANTS.items():
+        factor = f[phase] + (f.get("comm", 0.0) if phase == "reduce"
+                             else 0.0)
         ratios = []
         for lvl, err in probe_errors.get(phase, {}).items():
-            denom = machine_eps(lvl) * f[phase]
+            denom = machine_eps(lvl) * factor
             if denom > 0.0:
                 ratios.append(float(err) / denom)
         if ratios:
@@ -105,13 +113,16 @@ def prune_lattice(configs: Iterable[PrecisionConfig], tol: float, N_t: int,
                   adjoint: bool = False, variant: str | None = None,
                   kappa: float = 1.0, input_level: str = "d",
                   constants: Mapping[str, float] | None = None,
-                  slack: float = 1.0) -> PruneReport:
+                  slack: float = 1.0,
+                  comm_level: str | None = None) -> PruneReport:
     """Prune a config lattice with eq. (6) alone (no measurements).
 
     A config survives to the *frontier* iff its bound is within
     ``slack * tol`` and no strictly-cheaper (lattice-order) config is also
     within the cutoff.  The all-highest config is always kept feasible —
-    it is the measurement baseline and the fallback selection."""
+    it is the measurement baseline and the fallback selection.
+    ``comm_level`` prices the reduced-precision-communication knob into
+    every bound (see ``core.error_model.relative_error_bound``)."""
     if tol <= 0.0:
         raise ValueError(f"tolerance must be positive, got {tol}")
     configs = list(configs)
@@ -119,7 +130,7 @@ def prune_lattice(configs: Iterable[PrecisionConfig], tol: float, N_t: int,
         raise ValueError("empty config lattice")
     bounds = lattice_bounds(configs, N_t, N_d, N_m, p_r=p_r, p_c=p_c,
                             adjoint=adjoint, variant=variant, kappa=kappa,
-                            input_level=input_level,
+                            input_level=input_level, comm_level=comm_level,
                             constants=dict(constants) if constants else None)
     cutoff = slack * tol
     best = min(configs, key=lambda cfg: (bounds[cfg.to_string()],

@@ -18,7 +18,7 @@ from repro.backend import (BUILTIN_SPECS, CPU_INTERPRET, CPU_XLA,
 from repro.backend import registry as breg
 from repro.backend.spec import BackendSpec
 from repro.configs.fftmatvec_paper import SMOKE as PAPER_SMOKE
-from repro.core import (ExecOpts, FFTMatvec, MatvecOptions, PrecisionConfig,
+from repro.core import (ExecOpts, FFTMatvec, PrecisionConfig,
                         dense_matvec, random_block_column, rel_l2)
 from repro.kernels import ops
 from repro.tune import TuningCache
@@ -159,10 +159,6 @@ def test_ops_explicit_pallas_f64_raises_auto_falls_back():
                  lambda **kw: ops.sbgemm_gram(A, A, **kw)):
         with pytest.raises(UnsupportedOnBackend):
             call(backend=CPU_INTERPRET, dispatch=force)
-        # the legacy shim spelling raises identically
-        with pytest.warns(DeprecationWarning):
-            with pytest.raises(UnsupportedOnBackend):
-                call(use_pallas=True, interpret=True)
         # auto dispatch silently falls back and keeps f64
         out = call(backend=CPU_INTERPRET)
         leaf = out[0] if isinstance(out, tuple) else out
@@ -227,7 +223,7 @@ def test_calibration_without_pallas_keeps_xla():
 
 
 # ---------------------------------------------------------------------------
-# ExecOpts + the deprecation shim
+# ExecOpts + the retired deprecation shim
 # ---------------------------------------------------------------------------
 
 def test_exec_opts_resolution_and_hashability():
@@ -239,46 +235,27 @@ def test_exec_opts_resolution_and_hashability():
     assert r2.spec.pallas_interpret and r2.block_n == 128
 
 
-def test_legacy_use_pallas_without_interpret_raises_on_no_pallas_backend():
-    """The shim must not fabricate Pallas capability: use_pallas=True on a
-    backend without the kernels raises the clear error, not a Mosaic
-    lowering crash."""
+def test_legacy_kwargs_are_gone():
+    """The one-release shim promised in the backend-layer PR is retired:
+    the old use_pallas/interpret/xla_fused kwargs are hard TypeErrors, and
+    MatvecOptions is no longer exported — no DeprecationWarning path
+    survives in kernels.ops."""
+    import warnings
+    import repro.core
     A = jnp.ones((2, 4, 64), F32)
     x = jnp.ones((2, 4), F32)
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(UnsupportedOnBackend, match="has none"):
-            ops.sbgemv(A, A, x, x, "H", backend=CPU_XLA, use_pallas=True)
-
-
-def test_legacy_xla_fused_false_does_not_override_use_pallas_true():
-    """Old call sites short-circuited on use_pallas=True before consulting
-    xla_fused — the shim must keep that precedence."""
-    from repro.kernels.ops import resolve_backend_dispatch
-    with pytest.warns(DeprecationWarning):
-        _, table = resolve_backend_dispatch(
-            None, None, use_pallas=True, interpret=True, xla_fused=False)
-    assert table.force == "pallas"
-    with pytest.warns(DeprecationWarning):
-        _, table = resolve_backend_dispatch(
-            None, None, use_pallas=False, xla_fused=False)
-    assert table.force == "ref"
-
-
-def test_matvec_options_shim_maps_onto_backend_layer():
-    with pytest.warns(DeprecationWarning):
-        opts = MatvecOptions(use_pallas=True, interpret=True,
-                             fuse_pad_cast=True, block_n=128, block_s=8)
-    assert isinstance(opts, ExecOpts)
-    r = opts.resolve()
-    assert r.spec.name == "cpu-interpret"
-    assert r.table.force == "pallas"
-    assert r.block_n == 128 and r.block_s == 8 and r.fuse_pad_cast is True
-    with pytest.warns(DeprecationWarning):
-        assert MatvecOptions(use_pallas=False).dispatch.force == "xla"
-    with pytest.warns(DeprecationWarning):
-        # "auto" pins no table — resolution falls to the backend default
-        # (force=None on capable backends, "ref" under REPRO_BACKEND=xla-ref)
-        assert MatvecOptions(use_pallas="auto").dispatch is None
+    for kw in ({"use_pallas": True}, {"interpret": True},
+               {"xla_fused": False}):
+        with pytest.raises(TypeError):
+            ops.sbgemv(A, A, x, x, "H", **kw)
+    with pytest.raises(TypeError):
+        ops.pad_cast(x, 8, F32, use_pallas=True)
+    assert not hasattr(repro.core, "MatvecOptions")
+    # the new spelling never warns
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        ops.sbgemv(A, A, x, x, "H", backend=CPU_INTERPRET,
+                   dispatch=DispatchTable(force="pallas"))
 
 
 # ---------------------------------------------------------------------------

@@ -7,22 +7,22 @@ and a sharded train step against their single-device references.
 """
 
 import json
-import os
 import subprocess
 import sys
+from types import SimpleNamespace
 
+import jax
+import jax.numpy as jnp
 import pytest
 
-from repro.core import NetworkModel, choose_grid, matvec_comm_time, paper_grid
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from repro.core import (NetworkModel, TPU_POD_NETWORK, choose_grid,
+                        matvec_comm_time, paper_grid)
+from repro.jax_compat import forced_host_devices_env
 
 
 def _run(code: str) -> dict:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run([sys.executable, "-c", code], env=env,
+    out = subprocess.run([sys.executable, "-c", code],
+                         env=forced_host_devices_env(8),
                          capture_output=True, text=True, timeout=540)
     assert out.returncode == 0, out.stderr[-4000:]
     return json.loads(out.stdout.splitlines()[-1])
@@ -155,6 +155,167 @@ print(json.dumps({"err": err, "seq_spec": str(dspecs["k"])}))
 
 
 # ---------------------------------------------------------------------------
+# hierarchical collectives: 2x4 grid vs flat 1x8 on 8 simulated devices
+# ---------------------------------------------------------------------------
+
+def test_hierarchical_grid_matches_flat_subprocess():
+    """The executed comm-aware grid: the 2x4 hierarchical path must match
+    the flat 1x8 path (and the dense truth) to the precision-config
+    tolerance for matvec, rmatvec, and the exact Gram's mid-psum; the
+    mesh='auto' constructor must be reachable end to end; a reduced comm
+    level must round at the comm precision while preserving the carrier
+    dtype; and the reduce_scatter lowering must stay numerically exact."""
+    res = _run(r"""
+import jax, json
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.core import (FFTMatvec, PrecisionConfig, dense_matvec,
+                        dense_rmatvec, random_block_column, rel_l2)
+from repro.jax_compat import make_mesh
+Nt, Nd, Nm = 16, 8, 32
+F_col = random_block_column(jax.random.PRNGKey(0), Nt, Nd, Nm, dtype=jnp.float64)
+m = jax.random.normal(jax.random.PRNGKey(1), (Nm, Nt), dtype=jnp.float64)
+d = jax.random.normal(jax.random.PRNGKey(2), (Nd, Nt), dtype=jnp.float64)
+flat = FFTMatvec.from_block_column(F_col, mesh=make_mesh((1, 8), ("row", "col")))
+hier = FFTMatvec.from_block_column(F_col, mesh=make_mesh((2, 4), ("row", "col")))
+res = {"flat_grid": list(flat.grid_shape()), "hier_grid": list(hier.grid_shape()),
+       "flat_coll": flat._collective_kind(("col",)),
+       "hier_coll": hier._collective_kind(("col",))}
+mv = lambda op, v: op.matvec(jax.device_put(v, op.m_sharding()))
+rmv = lambda op, v: op.rmatvec(jax.device_put(v, op.d_sharding()))
+res["e_mv"] = rel_l2(mv(hier, m), mv(flat, m))
+res["e_rmv"] = rel_l2(rmv(hier, d), rmv(flat, d))
+res["e_mv_dense"] = rel_l2(mv(hier, m), dense_matvec(F_col, m))
+# exact Gram with the mid psum on the hierarchical grid
+gp = hier.gram(space="parameter")
+res["e_gram"] = rel_l2(gp.apply(jax.device_put(m, gp.v_sharding())),
+                       dense_rmatvec(F_col, dense_matvec(F_col, m)))
+gd = hier.gram(space="data")
+res["e_gram_data"] = rel_l2(gd.apply(jax.device_put(d, gd.v_sharding())),
+                            dense_matvec(F_col, dense_rmatvec(F_col, d)))
+# mesh="auto" reaches choose_grid end to end (8 devices -> flat regime)
+auto = FFTMatvec.from_block_column(F_col, mesh="auto")
+res["auto_grid"] = list(auto.grid_shape())
+res["e_auto"] = rel_l2(mv(auto, m), dense_matvec(F_col, m))
+# reduced-precision comm: f32 rounding, f64 carrier preserved
+lo = hier.with_comm("s")
+out = mv(lo, m)
+res["comm_dtype_f64"] = str(out.dtype) == "float64"
+res["e_comm"] = rel_l2(out, dense_matvec(F_col, m))
+# reduce_scatter + all_gather lowering is the same all-reduce numerically
+rs = FFTMatvec.from_block_column(
+    F_col, mesh=make_mesh((1, 8), ("row", "col")), collective="reduce_scatter")
+res["e_rs"] = rel_l2(mv(rs, m), dense_matvec(F_col, m))
+print(json.dumps(res))
+""")
+    assert res["flat_grid"] == [1, 8] and res["hier_grid"] == [2, 4]
+    assert res["flat_coll"] == "psum" and res["hier_coll"] == "hierarchical"
+    assert res["e_mv"] < 1e-13 and res["e_rmv"] < 1e-13
+    assert res["e_mv_dense"] < 1e-13 and res["e_auto"] < 1e-13
+    assert res["e_gram"] < 1e-12 and res["e_gram_data"] < 1e-12
+    assert res["auto_grid"] == [1, 8]           # flat regime at p = 8
+    assert res["comm_dtype_f64"]
+    assert 1e-10 < res["e_comm"] < 1e-6         # f32 comm rounding, no more
+    assert res["e_rs"] < 1e-13
+
+
+def test_two_stage_reduction_instrumented_subprocess():
+    """A col group spanning two mesh axes lowers to the two-stage
+    (fast-tier-then-slow-tier) reduction — observable in the collective
+    instrumentation, with output parity against the dense truth."""
+    res = _run(r"""
+import jax, json
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.core import (FFTMatvec, dense_matvec, random_block_column,
+                        record_stages, rel_l2)
+from repro.jax_compat import make_mesh
+Nt, Nd, Nm = 16, 8, 32
+F_col = random_block_column(jax.random.PRNGKey(0), Nt, Nd, Nm, dtype=jnp.float64)
+m = jax.random.normal(jax.random.PRNGKey(1), (Nm, Nt), dtype=jnp.float64)
+mesh = make_mesh((2, 2, 2), ("row", "c1", "c2"))
+op = FFTMatvec.from_block_column(F_col, mesh=mesh, row_axis="row",
+                                 col_axis=("c1", "c2"))
+with record_stages() as c:
+    out = op.matvec(jax.device_put(m, op.m_sharding()))
+print(json.dumps({"err": rel_l2(out, dense_matvec(F_col, m)),
+                  "grid": list(op.grid_shape()), "counts": dict(c)}))
+""")
+    assert res["err"] < 1e-13
+    assert res["grid"] == [2, 4]
+    assert res["counts"]["psum"] == 1
+    # the one psum stage launched TWO staged collectives (c2 then c1)
+    assert res["counts"]["collective:hierarchical"] == 2
+
+
+# ---------------------------------------------------------------------------
+# psum stage semantics (single process, named axes via vmap)
+# ---------------------------------------------------------------------------
+
+def _run_psum_stage(stage, x):
+    from repro.core import ExecOpts
+    from repro.core.pipeline import run_stages
+    opts = ExecOpts().resolve()
+    f = lambda v: run_stages((stage,), v, {}, N_t=4, opts=opts)
+    for ax in stage.axes:              # bind outer axes first
+        f = jax.vmap(f, axis_name=ax)
+    return f(x)
+
+
+def test_psum_restores_carrier_dtype():
+    """Regression: a psum at a low comm level must reduce at that level
+    but hand the next stage the *incoming* carrier dtype — the old code
+    left the carrier downgraded."""
+    from repro.core.pipeline import Stage
+    st = Stage("psum", "s", axis="col")
+    # 1 + 2^-40 is exact in f64, rounds to 1 in f32: the comm rounding is
+    # visible in the value while the carrier dtype survives
+    x = jnp.array([[1.0 + 2.0 ** -40], [1.0]], jnp.float64)[:, :, None]
+    out = _run_psum_stage(st, x)
+    assert out.dtype == jnp.float64
+    assert float(out[0, 0, 0]) == 2.0            # f32 comm dropped the bit
+    hi = _run_psum_stage(Stage("psum", "d", axis="col"), x)
+    assert float(hi[0, 0, 0]) == 2.0 + 2.0 ** -40   # d comm keeps it
+
+
+def test_psum_plane_pair_carrier():
+    """A (re, im) plane-pair carrier reduces plane-wise with dtypes
+    preserved (the Gram mid-psum case)."""
+    from repro.core.pipeline import Stage
+    st = Stage("psum", "s", axis="col")
+    re = jnp.ones((2, 1, 3), jnp.float64)
+    im = 2.0 * jnp.ones((2, 1, 3), jnp.float64)
+    from repro.core import ExecOpts
+    from repro.core.pipeline import run_stages
+    opts = ExecOpts().resolve()
+    out = jax.vmap(lambda p: run_stages((st,), p, {}, N_t=4, opts=opts),
+                   axis_name="col")((re, im))
+    assert out[0].dtype == out[1].dtype == jnp.float64
+    assert float(out[0][0, 0, 0]) == 2.0 and float(out[1][0, 0, 0]) == 4.0
+
+
+def test_hierarchical_collective_counts():
+    """Stage-count instrumentation for the two-stage reduction, and the
+    collective-kind validation."""
+    from repro.core import record_stages
+    from repro.core.pipeline import Stage
+    st = Stage("psum", "d", axis=("row", "col"), collective="hierarchical",
+               groups=(2, 2))
+    x = jnp.ones((2, 2, 1, 4), jnp.float64)
+    with record_stages() as c:
+        out = _run_psum_stage(st, x)
+    assert float(out[0, 0, 0, 0]) == 4.0
+    assert c["psum"] == 1 and c["collective:hierarchical"] == 2
+    with record_stages() as c:
+        _run_psum_stage(Stage("psum", "d", axis=("row", "col")), x)
+    assert c["collective:psum"] == 1             # flat: ONE fused all-reduce
+    with pytest.raises(ValueError, match="collective"):
+        Stage("psum", "d", axis="col", collective="bogus")
+    with pytest.raises(ValueError, match="groups"):
+        Stage("psum", "d", axis="col", groups=(2, 4))
+
+
+# ---------------------------------------------------------------------------
 # communication-aware partitioning (pure host-side model)
 # ---------------------------------------------------------------------------
 
@@ -191,3 +352,41 @@ def test_network_model_monotonic_in_latency():
     t_s = matvec_comm_time(1, 4096, 1000, 100, 5000 * 4096, net=slow)
     t_f = matvec_comm_time(1, 4096, 1000, 100, 5000 * 4096, net=fast)
     assert t_s > t_f
+
+
+def test_choose_grid_agrees_with_paper_grid_at_published_counts():
+    """Acceptance: under the default NetworkModel the modeled optimum IS
+    the published Frontier grid at every device count the paper reports
+    (§4.2.2) — the model and the measured grids no longer disagree."""
+    for p in (8, 512, 1024, 2048, 4096):
+        assert choose_grid(p, N_t=1000, N_d=100, N_m=5000 * p) \
+            == paper_grid(p), p
+
+
+def _fake_mesh(shape, axes):
+    return SimpleNamespace(devices=SimpleNamespace(shape=shape),
+                           axis_names=axes)
+
+
+def test_fftmatvec_grid_consistent_with_choose_grid():
+    """launch.mesh.fftmatvec_grid is the same cost model restricted to
+    the splits a mesh can realize: flat within one pod, rows = ('pod',)
+    across pods — and the chosen split minimizes matvec_comm_time among
+    the realizable ones."""
+    from repro.launch.mesh import fftmatvec_grid
+
+    single = _fake_mesh((16, 16), ("data", "model"))
+    assert fftmatvec_grid(single) == ((), ("data", "model"))
+
+    multi = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    rows, cols = fftmatvec_grid(multi)
+    assert rows == ("pod",) and cols == ("data", "model")
+    # optimality among realizable prefix splits under the same model
+    p = 512
+    costs = {p_r: matvec_comm_time(p_r, p // p_r, 1000, 100, 5000 * p,
+                                   net=TPU_POD_NETWORK)
+             for p_r in (1, 2, 32)}          # prefix products of (2,16,16)
+    assert min(costs, key=costs.get) == 2
+    # the flat regime threshold mirrors choose_grid's
+    assert choose_grid(256, 1000, 100, 5000 * 256,
+                       net=TPU_POD_NETWORK) == (1, 256)

@@ -13,8 +13,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (FFTMatvec, GaussianInverseProblem, GramOperator,
-                        MatvecOptions, PrecisionConfig, gram_plan,
+from repro.backend import DispatchTable
+from repro.core import (ExecOpts, FFTMatvec, GaussianInverseProblem,
+                        GramOperator, PrecisionConfig, gram_plan,
                         matvec_plan, random_block_column,
                         random_unrepresentable, record_stages, rel_l2,
                         stage_counts)
@@ -28,7 +29,7 @@ def make_op(Nt=16, Nd=3, Nm=7, prec="ddddd", seed=0, **opts):
                                 dtype=jnp.float64)
     return FFTMatvec.from_block_column(
         F_col, precision=PrecisionConfig.from_string(prec),
-        opts=MatvecOptions(**opts))
+        opts=ExecOpts(**opts))
 
 
 # ---------------------------------------------------------------------------
@@ -78,7 +79,8 @@ def test_gram_symmetric_psd():
 
 
 def test_gram_jitted_and_pallas_interpret_path():
-    op = make_op(16, 4, 64, prec="sssss", use_pallas=True, interpret=True,
+    op = make_op(16, 4, 64, prec="sssss", backend="cpu-interpret",
+                 dispatch=DispatchTable(force="pallas"),
                  fuse_pad_cast=True, block_n=128)
     base = make_op(16, 4, 64, prec="sssss")
     v = jax.random.normal(jax.random.PRNGKey(6), (64, 16), jnp.float32)
@@ -172,8 +174,9 @@ def test_sbgemm_gram_pallas_matches_oracle(space, B, m, n):
     ks = jax.random.split(jax.random.PRNGKey(10), 2)
     A_re = jax.random.normal(ks[0], (B, m, n), jnp.float32)
     A_im = jax.random.normal(ks[1], (B, m, n), jnp.float32)
-    got = ops.sbgemm_gram(A_re, A_im, space=space, use_pallas=True,
-                          interpret=True, block_n=128)
+    got = ops.sbgemm_gram(A_re, A_im, space=space, backend="cpu-interpret",
+                          dispatch=DispatchTable(force="pallas"),
+                          block_n=128)
     want = ref.sbgemm_gram_ref(A_re, A_im, space)
     for g, w in zip(got, want):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),

@@ -6,9 +6,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.backend import DispatchTable
 from repro.kernels import ops, ref
 from repro.kernels.pad_cast import pad_cast as pal_pad_cast
 from repro.kernels.pad_cast import unpad_cast as pal_unpad_cast
+
+# Interpret-mode Pallas, explicitly forced (the CPU validation spelling).
+PALLAS = dict(backend="cpu-interpret", dispatch=DispatchTable(force="pallas"))
 
 SHAPES = [(3, 4, 128), (2, 100, 640), (1, 8, 512), (5, 16, 256),
           (2, 104, 1280)]
@@ -33,8 +37,8 @@ def _tol(dtype):
 @pytest.mark.parametrize("mode", ["T", "H"])
 def test_sbgemv_th_complex(B, m, n, dtype, mode):
     Ar, Ai, xr, xi = _planes(jax.random.PRNGKey(0), B, m, n, dtype)
-    got = ops.sbgemv(Ar, Ai, xr, xi, mode, use_pallas=True, interpret=True,
-                     block_n=128, out_dtype=jnp.float32)
+    got = ops.sbgemv(Ar, Ai, xr, xi, mode, block_n=128, out_dtype=jnp.float32,
+                     **PALLAS)
     want = ref.sbgemv_complex_ref(Ar.astype(jnp.float32),
                                   Ai.astype(jnp.float32),
                                   xr.astype(jnp.float32),
@@ -52,8 +56,8 @@ def test_sbgemv_n_complex(B, m, n, dtype):
     mk = lambda k, shape: jax.random.normal(k, shape, jnp.float32).astype(dtype)
     Ar, Ai = mk(ks[0], (B, m, n)), mk(ks[1], (B, m, n))
     xr, xi = mk(ks[2], (B, n)), mk(ks[3], (B, n))
-    got = ops.sbgemv(Ar, Ai, xr, xi, "N", use_pallas=True, interpret=True,
-                     block_n=128, out_dtype=jnp.float32)
+    got = ops.sbgemv(Ar, Ai, xr, xi, "N", block_n=128, out_dtype=jnp.float32,
+                     **PALLAS)
     want = ref.sbgemv_complex_ref(Ar.astype(jnp.float32),
                                   Ai.astype(jnp.float32),
                                   xr.astype(jnp.float32),
@@ -67,8 +71,7 @@ def test_sbgemv_n_complex(B, m, n, dtype):
 def test_sbgemv_unaligned_shapes(B, m, n):
     """Wrapper must pad to sublane/lane multiples and slice back."""
     Ar, Ai, xr, xi = _planes(jax.random.PRNGKey(2), B, m, n, jnp.float32)
-    got = ops.sbgemv(Ar, Ai, xr, xi, "H", use_pallas=True, interpret=True,
-                     block_n=128)
+    got = ops.sbgemv(Ar, Ai, xr, xi, "H", block_n=128, **PALLAS)
     want = ref.sbgemv_complex_ref(Ar, Ai, xr, xi, "H")
     np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
                                rtol=1e-5, atol=1e-5)
@@ -82,8 +85,8 @@ def test_sbgemv_real(mode, dtype):
     A = jax.random.normal(k1, (B, m, n), jnp.float32).astype(dtype)
     x = jax.random.normal(k2, (B, m if mode == "T" else n),
                           jnp.float32).astype(dtype)
-    got = ops.sbgemv_real(A, x, mode, use_pallas=True, interpret=True,
-                          block_n=128, out_dtype=jnp.float32)
+    got = ops.sbgemv_real(A, x, mode, block_n=128, out_dtype=jnp.float32,
+                          **PALLAS)
     want = ref.sbgemv_real_ref(A.astype(jnp.float32), x.astype(jnp.float32),
                                mode)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -129,9 +132,8 @@ def test_dispatcher_f64_auto_falls_back_explicit_raises():
     xr = jnp.ones((B, m), jnp.float64)
     got = ops.sbgemv(Ar, Ar, xr, xr, "H", backend="cpu-interpret")  # auto
     assert got[0].dtype == jnp.float64
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(UnsupportedOnBackend, match="f64"):
-            ops.sbgemv(Ar, Ar, xr, xr, "H", use_pallas=True, interpret=True)
+    with pytest.raises(UnsupportedOnBackend, match="f64"):
+        ops.sbgemv(Ar, Ar, xr, xr, "H", **PALLAS)
 
 
 # ---------------------------------------------------------------------------
@@ -151,8 +153,8 @@ def test_sbgemm_matches_oracle(B, m, n, S, dtype, mode):
     Ar, Ai = mk(ks[0], (B, m, n)), mk(ks[1], (B, m, n))
     xd = n if mode == "N" else m
     Xr, Xi = mk(ks[2], (B, xd, S)), mk(ks[3], (B, xd, S))
-    got = ops.sbgemm(Ar, Ai, Xr, Xi, mode, use_pallas=True, interpret=True,
-                     block_n=128, block_s=8, out_dtype=jnp.float32)
+    got = ops.sbgemm(Ar, Ai, Xr, Xi, mode, block_n=128, block_s=8,
+                     out_dtype=jnp.float32, **PALLAS)
     want = ref.sbgemm_complex_ref(Ar.astype(jnp.float32),
                                   Ai.astype(jnp.float32),
                                   Xr.astype(jnp.float32),
@@ -163,21 +165,20 @@ def test_sbgemm_matches_oracle(B, m, n, S, dtype, mode):
 
 
 @pytest.mark.parametrize("mode", ["N", "T", "H"])
-@pytest.mark.parametrize("use_pallas", [True, False])
-def test_sbgemm_equals_columnwise_sbgemv(mode, use_pallas):
+@pytest.mark.parametrize("force", ["pallas", "xla"])
+def test_sbgemm_equals_columnwise_sbgemv(mode, force):
     """The batched-RHS kernel must reproduce S independent GEMVs."""
     B, m, n, S = 2, 12, 256, 3
+    kw = dict(backend="cpu-interpret", dispatch=DispatchTable(force=force))
     ks = jax.random.split(jax.random.PRNGKey(11), 4)
     mk = lambda k, shape: jax.random.normal(k, shape, jnp.float32)
     Ar, Ai = mk(ks[0], (B, m, n)), mk(ks[1], (B, m, n))
     xd = n if mode == "N" else m
     Xr, Xi = mk(ks[2], (B, xd, S)), mk(ks[3], (B, xd, S))
-    Yr, Yi = ops.sbgemm(Ar, Ai, Xr, Xi, mode, use_pallas=use_pallas,
-                        interpret=True, block_n=128, block_s=8)
+    Yr, Yi = ops.sbgemm(Ar, Ai, Xr, Xi, mode, block_n=128, block_s=8, **kw)
     for s in range(S):
         yr, yi = ops.sbgemv(Ar, Ai, Xr[:, :, s], Xi[:, :, s], mode,
-                            use_pallas=use_pallas, interpret=True,
-                            block_n=128)
+                            block_n=128, **kw)
         np.testing.assert_allclose(np.asarray(Yr[:, :, s]), np.asarray(yr),
                                    rtol=1e-5, atol=1e-5)
         np.testing.assert_allclose(np.asarray(Yi[:, :, s]), np.asarray(yi),
@@ -192,8 +193,8 @@ def test_sbgemm_real(mode, dtype):
     A = jax.random.normal(k1, (B, m, n), jnp.float32).astype(dtype)
     X = jax.random.normal(k2, (B, m if mode == "T" else n, S),
                           jnp.float32).astype(dtype)
-    got = ops.sbgemm_real(A, X, mode, use_pallas=True, interpret=True,
-                          block_n=128, block_s=8, out_dtype=jnp.float32)
+    got = ops.sbgemm_real(A, X, mode, block_n=128, block_s=8,
+                          out_dtype=jnp.float32, **PALLAS)
     want = ref.sbgemm_real_ref(A.astype(jnp.float32), X.astype(jnp.float32),
                                mode)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -207,6 +208,5 @@ def test_sbgemm_f64_auto_falls_back_explicit_raises():
     X = jnp.ones((B, m, S), jnp.float64)
     got = ops.sbgemm(A, A, X, X, "H", backend="cpu-interpret")      # auto
     assert got[0].dtype == jnp.float64 and got[0].shape == (B, n, S)
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(UnsupportedOnBackend, match="f64"):
-            ops.sbgemm(A, A, X, X, "H", use_pallas=True, interpret=True)
+    with pytest.raises(UnsupportedOnBackend, match="f64"):
+        ops.sbgemm(A, A, X, X, "H", **PALLAS)

@@ -18,6 +18,7 @@ from repro.core import (FFTMatvec, PrecisionConfig, dense_matvec,
 from repro.core.error_model import relative_error_bound
 from repro.core.pareto import ConfigRecord, optimal_config, pareto_front
 from repro.core.precision import all_configs, machine_eps
+from repro.backend import DispatchTable
 from repro.kernels import ops, ref
 
 dims = st.tuples(st.integers(2, 12), st.integers(1, 5), st.integers(1, 9))
@@ -69,8 +70,9 @@ def test_sbgemv_matches_oracle(B, m, n, mode, seed):
     Ai = jax.random.normal(ks[1], (B, m, n), jnp.float32)
     xr = jax.random.normal(ks[2], (B, xdim), jnp.float32)
     xi = jax.random.normal(ks[3], (B, xdim), jnp.float32)
-    got = ops.sbgemv(Ar, Ai, xr, xi, mode, use_pallas=True, interpret=True,
-                     block_n=128)
+    got = ops.sbgemv(Ar, Ai, xr, xi, mode, block_n=128,
+                     backend="cpu-interpret",
+                     dispatch=DispatchTable(force="pallas"))
     want = ref.sbgemv_complex_ref(Ar, Ai, xr, xi, mode)
     for g, w in zip(got, want):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),

@@ -1,14 +1,21 @@
 """Core FFTMatvec correctness: FFT pipeline vs dense reference, adjointness,
 circulant embedding, and the paper's heat-equation p2o construction."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (FFTMatvec, MatvecOptions, PrecisionConfig,
+from repro.backend import DispatchTable
+from repro.core import (ExecOpts, FFTMatvec, PrecisionConfig,
                         dense_from_block_column, dense_matvec, dense_rmatvec,
                         heat_equation_p2o, random_block_column, rel_l2)
+
+PALLAS_INTERPRET = ExecOpts(backend="cpu-interpret",
+                            dispatch=DispatchTable(force="pallas"),
+                            fuse_pad_cast=True, block_n=128)
 
 
 @pytest.mark.parametrize("Nt,Nd,Nm", [(4, 3, 5), (16, 2, 8), (13, 5, 7),
@@ -64,8 +71,7 @@ def test_pallas_path_matches_xla():
     base = FFTMatvec.from_block_column(F_col, precision=prec)
     pal = FFTMatvec.from_block_column(
         F_col, precision=prec,
-        opts=MatvecOptions(use_pallas=True, interpret=True,
-                           fuse_pad_cast=True, block_n=128))
+        opts=PALLAS_INTERPRET)
     assert rel_l2(pal.matvec(m), base.matvec(m)) < 1e-5
     assert rel_l2(pal.rmatvec(d), base.rmatvec(d)) < 1e-5
 
@@ -147,8 +153,7 @@ def test_matmat_pallas_path_matches_xla():
     base = FFTMatvec.from_block_column(F_col, precision=prec)
     pal = FFTMatvec.from_block_column(
         F_col, precision=prec,
-        opts=MatvecOptions(use_pallas=True, interpret=True,
-                           fuse_pad_cast=True, block_n=128, block_s=8))
+        opts=dataclasses.replace(PALLAS_INTERPRET, block_s=8))
     assert rel_l2(pal.matmat(M), base.matmat(M)) < 1e-5
     assert rel_l2(pal.rmatmat(D), base.rmatmat(D)) < 1e-5
 

@@ -456,3 +456,87 @@ def test_cgnr_accepts_auto_precision():
     res = cg_normal_equations(op, d_obs, damp=1e-8, tol=1e-8,
                               maxiter=400, precision="auto")
     assert rel_l2(op.matvec(res.x), d_obs) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Communication-precision knob (reduced-precision reductions)
+# ---------------------------------------------------------------------------
+
+def test_error_bound_comm_level_term():
+    """The reduction-tree term prices the comm level: comm=None reproduces
+    the old single-level bound exactly, a lower comm level can only raise
+    the bound, and on one device (log2 p = 0) the knob is free."""
+    from repro.core.error_model import relative_error_bound
+    cfg = PrecisionConfig.from_string("ddddd")
+    kw = dict(p_r=1, p_c=64)
+    base = relative_error_bound(cfg, 128, 25, 625, **kw)
+    same = relative_error_bound(cfg, 128, 25, 625, comm_level="d", **kw)
+    low = relative_error_bound(cfg, 128, 25, 625, comm_level="s", **kw)
+    lower = relative_error_bound(cfg, 128, 25, 625, comm_level="h", **kw)
+    assert same == base and base < low < lower
+    # the split factors still sum to the old 1 + log2(p) at one level
+    f = phase_factors(128, 25, 625, 1, 64)
+    assert f["reduce"] + f["comm"] == pytest.approx(1.0 + np.log2(64))
+    # single device: the tree term vanishes
+    assert relative_error_bound(cfg, 128, 25, 625, comm_level="h") \
+        == pytest.approx(relative_error_bound(cfg, 128, 25, 625))
+
+
+def test_prune_lattice_comm_level_pass_through():
+    """A low comm level tightens feasibility through the same pruner."""
+    lattice = list(all_configs(("d", "s")))
+    hi = prune_lattice(lattice, 1e-10, 128, 25, 625, p_c=4096)
+    lo = prune_lattice(lattice, 1e-10, 128, 25, 625, p_c=4096,
+                       comm_level="h")
+    assert len(lo.model_feasible) <= len(hi.model_feasible)
+    for cfg in lattice:
+        assert lo.bounds[cfg.to_string()] >= hi.bounds[cfg.to_string()]
+
+
+def test_cache_key_carries_comm_level(tmp_path):
+    """TuningCache entries are keyed on the comm knob: a reduced-comm tune
+    never answers a full-precision query (and vice versa)."""
+    op, _, _ = small_problem(Nt=8, Nd=3, Nm=6)
+    k_hi = CacheKey.for_operator(op, ("d", "s"), "matvec")
+    k_lo = CacheKey.for_operator(op, ("d", "s"), "matvec", comm_level="s")
+    assert k_hi.to_string() != k_lo.to_string()
+    assert ";comm=s" in k_lo.to_string()
+
+
+def test_autotune_reads_operator_comm_level(tmp_path):
+    """autotune keys the cache on op.comm_level and still selects a
+    feasible config under the synthetic timer."""
+    op, _, _ = small_problem(Nt=8, Nd=3, Nm=6)
+    lo_op = op.with_comm("s")
+    assert lo_op.comm_level == "s"
+    cache = TuningCache(tmp_path / "tune.json")
+    res = autotune(lo_op, tol=1e-6, timer=fake_timer, cache=cache)
+    assert res.record.rel_error <= 1e-6
+    assert ";comm=s" in res.cache_key.to_string()
+    # the full-precision operator misses that entry and re-tunes
+    res_hi = autotune(op, tol=1e-6, timer=fake_timer, cache=cache)
+    assert not res_hi.from_cache
+
+
+def test_calibrate_constants_no_double_count_at_scale():
+    """The reduce probe's error covers the storage cast AND the log2(p)
+    comm tree at the probed level; c5 must be fitted against their summed
+    factor — dividing by the storage term alone would inflate c5 by
+    (1 + log2 p) and the bound would double-count the tree."""
+    Nt, Nd, Nm, p_c = 64, 8, 100 * 64, 64
+    f = phase_factors(Nt, Nd, Nm, 1, p_c)
+    err = 1.0 * machine_eps("s") * (f["reduce"] + f["comm"])
+    fitted = calibrate_constants({"reduce": {"s": err}}, Nt, Nd, Nm, p_c=p_c)
+    assert fitted["c5"] == pytest.approx(1.0)
+
+
+def test_error_floor_explicit_grid_override():
+    """An explicit (1, 1) must price the single-device floor even for a
+    meshed operator (None means 'read the grid off the mesh')."""
+    from repro.solvers import error_floor
+    op, _, _ = small_problem(Nt=8, Nd=3, Nm=6)
+    assert error_floor(op, p_r=1, p_c=1) == error_floor(op)  # no mesh
+    # once the gemv term is fully sharded away (n_m = 1), the remaining
+    # grid dependence is the comm tree — the floor must grow with it
+    assert error_floor(op, p_r=1, p_c=4096) \
+        > error_floor(op, p_r=1, p_c=6)
