@@ -12,6 +12,7 @@ paper:
   fig3  mixed-precision Pareto front, 32 configs, tol 1e-7      (Fig. 3)
   fig4  weak scaling w/ comm-aware partitioning + mixed prec    (Fig. 4)
   fig5  multi-RHS matmat + shared-matmat Krylov solver throughput (ext.)
+  fig6  SolveEngine serving throughput, coalesced vs naive        (ext.)
   hessian  composed-vs-fused Gram Hessian actions (Remark 1 outer loop)
 TPU-target roofline numbers live in benchmarks/roofline_report (reads the
 dry-run artifacts; EXPERIMENTS.md §Roofline).
@@ -26,13 +27,14 @@ jax.config.update("jax_enable_x64", True)   # paper-faithful f64 ladder
 
 def _registry():
     from . import (fig1_sbgemv, fig2_phase_breakdown, fig3_pareto,
-                   fig4_scaling, fig5_solver, hessian_gram)
+                   fig4_scaling, fig5_solver, fig6_serve, hessian_gram)
     return {
         "fig1": fig1_sbgemv.main,
         "fig2": fig2_phase_breakdown.main,
         "fig3": fig3_pareto.main,
         "fig4": fig4_scaling.main,
         "fig5": fig5_solver.main,
+        "fig6": fig6_serve.main,
         "hessian": hessian_gram.main,
     }
 

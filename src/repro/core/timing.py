@@ -99,6 +99,7 @@ class TimingHarness:
         self._jitted: dict = {}     # family / (variant, id) -> jitted callable
         self.timed: list[TimedEntry] = []
         self.n_runs = 0             # total operator applications issued
+        self.n_traces = 0           # executable builds (jit cache misses)
 
     # -- jit cache ----------------------------------------------------------
     def _shared(self, family: str):
@@ -106,9 +107,15 @@ class TimingHarness:
         static."""
         fn = self._jitted.get(family)
         if fn is None:
+            # self.n_traces increments at *trace* time only: a second call
+            # with the same (shapes, static args) is an executable-cache
+            # hit and leaves the counter untouched — this is the
+            # launch-count instrumentation SolveEngine's jit-reuse
+            # contract is tested against.
             if family == "gram":
                 def apply(F_re, F_im, x, *, N_t, cfg, opts, adjoint,
                           io_dtype):
+                    self.n_traces += 1
                     return _local_gram(F_re, F_im, x, N_t, cfg,
                                        opts).astype(io_dtype)
             else:
@@ -116,6 +123,7 @@ class TimingHarness:
 
                 def apply(F_re, F_im, x, *, N_t, cfg, opts, adjoint,
                           io_dtype):
+                    self.n_traces += 1
                     return local(F_re, F_im, x, N_t, cfg, opts,
                                  adjoint).astype(io_dtype)
 
@@ -139,7 +147,12 @@ class TimingHarness:
             if fn is None:
                 target = (op.gram(space="parameter").apply
                           if variant == "gram" else getattr(op, variant))
-                fn = jax.jit(target)
+
+                def counted(x, _target=target):
+                    self.n_traces += 1
+                    return _target(x)
+
+                fn = jax.jit(counted)
                 # bound-method closures pin the operator's sharded arrays;
                 # cap how many a long-lived harness retains (FIFO evict)
                 mesh_keys = [k for k in self._jitted
@@ -191,6 +204,13 @@ class TimingHarness:
     @property
     def n_timed(self) -> int:
         return len(self.timed)
+
+    @property
+    def n_appliers(self) -> int:
+        """Distinct jitted appliers retained (families + mesh fallbacks).
+        A SolveEngine serving many buckets keeps this at the family
+        count — buckets share appliers, only executables differ."""
+        return len(self._jitted)
 
     def timed_configs(self, variant: str | None = None) -> list:
         return [e.config for e in self.timed

@@ -1,2 +1,5 @@
 from .trainer import Trainer, TrainerConfig, PreemptionRequested  # noqa: F401
 from .serve import ServeEngine, Request, Result  # noqa: F401
+from .solve_serve import (AdmissionError, SolveEngine,  # noqa: F401
+                          SolveOutcome, SolveRequest, operator_fingerprint,
+                          tol_bucket)

@@ -56,18 +56,31 @@ class ServeEngine:
         self.key, sub = jax.random.split(self.key)
         return jax.random.categorical(sub, logits / self.temperature, -1)
 
+    @staticmethod
+    def _extras_signature(r: Request) -> frozenset:
+        return frozenset(r.extras) if r.extras else frozenset()
+
     def run_batch(self, requests: list[Request]) -> list[Result]:
-        """One continuous-batching round over same-length-bucket requests."""
+        """One continuous-batching round over same-length-bucket requests.
+
+        All requests must carry the same extras keys: a batch mixing
+        extras-bearing and plain requests cannot be stacked into one
+        model input (``serve`` partitions on the extras signature before
+        calling here)."""
+        sigs = {self._extras_signature(r) for r in requests}
+        if len(sigs) > 1:
+            raise ValueError(
+                f"mixed extras in one batch ({sorted(map(sorted, sigs))}); "
+                f"partition by extras signature first (serve() does)")
         B = len(requests)
         S = max(len(r.prompt) for r in requests)
         prompts = np.full((B, S), 0, np.int32)
         for i, r in enumerate(requests):
             prompts[i, S - len(r.prompt):] = r.prompt      # left-pad
         batch = {"tokens": jnp.asarray(prompts)}
-        if requests[0].extras:
-            for k, v in requests[0].extras.items():
-                batch[k] = jnp.stack(
-                    [jnp.asarray(r.extras[k]) for r in requests])
+        for k in sorted(sigs.pop()):
+            batch[k] = jnp.stack(
+                [jnp.asarray(r.extras[k]) for r in requests])
 
         logits, state = self._prefill(self.params, batch)
         tok = self._sample(logits)
@@ -92,11 +105,15 @@ class ServeEngine:
         return results
 
     def serve(self, requests: list[Request], bucket: int = 128) -> list[Result]:
-        """Group requests into prompt-length buckets, run each batch."""
-        buckets: dict[int, list[Request]] = {}
+        """Group requests into (prompt-length, extras-signature) buckets,
+        run each batch.  The extras signature keeps batches stackable:
+        mixing vlm/enc-dec requests with plain ones used to crash
+        ``run_batch`` (or silently drop the extras of later requests)."""
+        buckets: dict[tuple, list[Request]] = {}
         for r in requests:
             b = (len(r.prompt) + bucket - 1) // bucket
-            buckets.setdefault(b, []).append(r)
+            key = (b, tuple(sorted(self._extras_signature(r))))
+            buckets.setdefault(key, []).append(r)
         results = []
         for _, reqs in sorted(buckets.items()):
             results.extend(self.run_batch(reqs))

@@ -1,0 +1,272 @@
+"""Multi-tenant solve serving: continuous batching for FFTMatvec/Krylov.
+
+The solver-side analogue of :class:`repro.runtime.serve.ServeEngine`: a
+request queue of independent inverse-problem solves, each carrying its
+own ``(d_obs, tolerance, max_iters)``, served by coalescing compatible
+requests into ONE multi-RHS CGNR call so independent users fill the S
+axis of the SBGEMM kernels (which exist precisely to amortize F_hat tile
+reads over S columns — until now only synthetic batches ever did).
+
+Pipeline per admitted request:
+
+  admission   d_obs shape routes to a registered operator (shape buckets,
+              like ServeEngine's prompt-length buckets); bad shapes /
+              non-positive tolerances are rejected up front.
+  bucketing   the tolerance is rounded DOWN to its decade bucket — the
+              served config is never *looser* than what the user asked
+              for — and requests group by (operator fingerprint,
+              tolerance bucket, damp).
+  tuning      tolerance -> operator PrecisionConfig through the
+              TuningCache/autotune path (variant="gram": CGNR's per-
+              iteration cost).  Warm path: a cache lookup answers from
+              stored records; cold path: one autotune per bucket, which
+              also populates the cache for every later engine/process.
+  coalescing  up to ``max_batch`` bucket-mates stack their observation
+              blocks along the RHS axis and share one
+              gram-apply-per-iteration PCG with per-column tolerances
+              and iteration budgets (``pcg``'s column freeze keeps a
+              converged user's solution from drifting while batch-mates
+              finish).
+  demux       each request gets back its own column: solution, converged
+              flag, iteration count and residual history.
+
+Jit reuse: every operator application routes through ONE shared
+:class:`~repro.core.timing.TimingHarness` — the one-applier-per-family
+pattern with the precision config as a static argument — so serving a
+second bucket (or the same bucket at another precision) reuses the same
+jitted applier and re-serving a bucket is an executable-cache hit, never
+a retrace.  ``TimingHarness.n_traces``/``n_appliers`` make that contract
+observable (and tested) rather than asserted by docstring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.solvers import pcg
+from repro.core.timing import TimingHarness
+
+
+class AdmissionError(ValueError):
+    """A request the engine cannot serve: unroutable observation shape,
+    non-positive tolerance, or negative iteration budget."""
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One user's inverse-problem solve.
+
+    ``d_obs`` is the (N_d, N_t) SOTI observation block; its shape routes
+    the request to a registered operator.  ``tol`` is the user's relative
+    residual target (drives both the operator precision config and this
+    column's stopping test), ``max_iters`` the per-request iteration
+    budget, ``damp`` the Tikhonov damping of the CGNR normal operator."""
+    uid: int
+    d_obs: np.ndarray
+    tol: float = 1e-6
+    max_iters: int = 200
+    damp: float = 0.0
+
+
+@dataclasses.dataclass
+class SolveOutcome:
+    """Demuxed per-request result of a (possibly coalesced) solve."""
+    uid: int
+    x: np.ndarray                   # (N_m, N_t) MAP point
+    converged: bool
+    n_iters: int                    # iterations this column actually updated
+    relres: float                   # final relative residual of this column
+    residual_history: np.ndarray    # this column's history, trimmed
+    config: str                     # operator PrecisionConfig served under
+    coalesced: int                  # S of the batch this request rode in
+
+
+def tol_bucket(tol: float, base: float = 10.0) -> float:
+    """Round ``tol`` DOWN to its bucket boundary (decades by default).
+
+    Bucketing must never select a config looser than the request: the
+    bucket tolerance is always <= ``tol``, so a config feasible at the
+    bucket is feasible for every request in it."""
+    if tol <= 0.0:
+        raise AdmissionError(f"tolerance must be positive, got {tol}")
+    return float(base ** math.floor(math.log(tol, base)))
+
+
+def operator_fingerprint(op) -> str:
+    """Coalescing identity of an operator: problem shape, a content
+    digest of the stored Fourier blocks, backend fingerprint + dispatch
+    identity, grid, and comm precision — two requests may share a batch
+    only when their solves run the exact same pipeline on the exact same
+    operator data."""
+    import hashlib
+    r = op.opts.resolve()
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(np.asarray(op.F_hat_re)).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(op.F_hat_im)).tobytes())
+    return (f"{op.N_t}x{op.N_d}x{op.N_m}/F={h.hexdigest()[:12]}"
+            f"/{r.spec.fingerprint()}/disp={r.table.describe()}"
+            f"/grid={op.grid_shape()}/comm={op.comm_level}")
+
+
+class SolveEngine:
+    """Continuous-batching engine over inverse-problem solve requests.
+
+    Parameters
+    ----------
+    operators:
+        one FFTMatvec or a sequence — each registered under its
+        fingerprint; requests route by ``d_obs`` shape (ambiguous shapes
+        are a construction error).  Operators should be the
+        highest-precision build (``autotune`` recasts down per bucket).
+    cache, cache_path:
+        optional :class:`~repro.tune.TuningCache` (or a path) backing the
+        warm tuning path; shared across engines/processes (merge-on-write
+        save).  Without it, configs are memoized per engine only.
+    harness:
+        the shared :class:`TimingHarness`; defaults to a fresh one.  All
+        buckets route applications through it (jit-reuse contract).
+    max_batch:
+        S cap per coalesced solve (admission splits larger buckets).
+    solver_precision:
+        per-leg Krylov precision forwarded to :func:`repro.solvers.pcg`
+        (default ``"auto"``: derived from the tightest tolerance in the
+        batch).
+    tune_kw:
+        extra keywords for the cold-path :func:`repro.tune.autotune`
+        call (e.g. ``timer`` for deterministic tests, ``ladder``).
+    """
+
+    def __init__(self, operators, *, cache=None, cache_path=None,
+                 harness: Optional[TimingHarness] = None,
+                 max_batch: int = 64, solver_precision="auto",
+                 tune_kw: Optional[dict] = None):
+        ops = [operators] if not isinstance(operators, (list, tuple)) \
+            else list(operators)
+        if not ops:
+            raise ValueError("SolveEngine needs at least one operator")
+        if cache is None and cache_path is not None:
+            from repro.tune import TuningCache
+            cache = TuningCache(cache_path)
+        self.cache = cache
+        self.harness = harness if harness is not None else TimingHarness()
+        self.max_batch = int(max_batch)
+        self.solver_precision = solver_precision
+        self.tune_kw = dict(tune_kw or {})
+        self._ops: dict[str, object] = {}
+        self._by_shape: dict[tuple, str] = {}
+        for op in ops:
+            fp = operator_fingerprint(op)
+            self._ops[fp] = op
+            shape = (op.N_d, op.N_t)
+            if shape in self._by_shape and self._by_shape[shape] != fp:
+                raise ValueError(
+                    f"two operators accept d_obs shape {shape}; requests "
+                    f"cannot be routed unambiguously")
+            self._by_shape[shape] = fp
+        self._tuned: dict[tuple, tuple] = {}   # (fp, bucket) -> (cfg, op_t)
+        self._queue: list[SolveRequest] = []
+        self.stats = {"requests": 0, "batches": 0, "coalesced": [],
+                      "cold_tunes": 0, "warm_hits": 0}
+
+    # -- admission ----------------------------------------------------------
+    def _route(self, req: SolveRequest) -> str:
+        shape = tuple(np.shape(req.d_obs))
+        fp = self._by_shape.get(shape)
+        if fp is None:
+            raise AdmissionError(
+                f"no registered operator accepts d_obs shape {shape} "
+                f"(known: {sorted(self._by_shape)})")
+        if req.max_iters < 0:
+            raise AdmissionError(
+                f"max_iters must be >= 0, got {req.max_iters}")
+        tol_bucket(req.tol)     # validates tol > 0
+        return fp
+
+    def submit(self, req: SolveRequest) -> None:
+        """Admit one request into the queue (raises AdmissionError)."""
+        self._route(req)
+        self._queue.append(req)
+
+    # -- tolerance -> config ------------------------------------------------
+    def _config_for(self, fp: str, bucket: float):
+        """Resolve the operator precision config for one (operator,
+        tolerance-bucket) pair: engine memo -> TuningCache (warm) ->
+        autotune (cold, populates the cache)."""
+        memo = self._tuned.get((fp, bucket))
+        if memo is not None:
+            return memo
+        from repro.tune import autotune
+        op = self._ops[fp]
+        res = autotune(op, tol=bucket, variant="gram",
+                       harness=self.harness, cache=self.cache,
+                       **self.tune_kw)
+        self.stats["warm_hits" if res.from_cache else "cold_tunes"] += 1
+        memo = (res.config, op.with_precision(res.config))
+        self._tuned[(fp, bucket)] = memo
+        return memo
+
+    # -- the coalesced solve ------------------------------------------------
+    def _run_batch(self, fp: str, bucket: float,
+                   requests: Sequence[SolveRequest]) -> list[SolveOutcome]:
+        cfg, op_t = self._config_for(fp, bucket)
+        gram_fn = self.harness.callable_for(op_t, "gram")
+        rmatmat = self.harness.callable_for(op_t, "rmatmat")
+        D = jnp.stack([jnp.asarray(r.d_obs) for r in requests],
+                      axis=-1).astype(op_t.io_dtype)
+        rhs = rmatmat(D)
+        damp = requests[0].damp         # batches group on damp
+        normal = (lambda v: gram_fn(v) + damp * v) if damp else gram_fn
+        tol_col = np.array([r.tol for r in requests], np.float64)
+        budget = np.array([r.max_iters for r in requests], int)
+        res = pcg(normal, rhs, tol=tol_col, maxiter=int(budget.max()),
+                  col_maxiter=budget, multi_rhs=True,
+                  precision=self.solver_precision)
+        self.stats["batches"] += 1
+        self.stats["coalesced"].append(len(requests))
+
+        hist = res.residual_history     # (rows, S); rows >= 1 always
+        outcomes = []
+        for s, r in enumerate(requests):
+            iters = int(res.col_iters[s])
+            h = hist[:max(iters, 1), s]
+            relres = float(h[-1])
+            outcomes.append(SolveOutcome(
+                uid=r.uid, x=np.asarray(res.x[..., s]),
+                converged=bool(relres < r.tol), n_iters=iters,
+                relres=relres, residual_history=h,
+                config=cfg.to_string(), coalesced=len(requests)))
+        return outcomes
+
+    # -- serving ------------------------------------------------------------
+    def serve(self, requests: Optional[Sequence[SolveRequest]] = None, *,
+              coalesce: bool = True) -> list[SolveOutcome]:
+        """Serve the queue plus ``requests``: admit, bucket, coalesce,
+        solve, demux.  ``coalesce=False`` is the naive one-at-a-time
+        baseline (same tuning path, S = 1 solves) the throughput
+        benchmark compares against.  Results come back in uid order."""
+        reqs = self._queue + list(requests or [])
+        self._queue = []
+        batches: dict[tuple, list[SolveRequest]] = {}
+        for r in reqs:
+            fp = self._route(r)
+            batches.setdefault((fp, tol_bucket(r.tol), float(r.damp)),
+                               []).append(r)
+        self.stats["requests"] += len(reqs)
+        out: list[SolveOutcome] = []
+        for (fp, bucket, _damp), group in batches.items():
+            chunk = 1 if not coalesce else self.max_batch
+            for i in range(0, len(group), chunk):
+                out.extend(self._run_batch(fp, bucket, group[i:i + chunk]))
+        return sorted(out, key=lambda o: o.uid)
+
+    # -- instrumentation ----------------------------------------------------
+    def jit_stats(self) -> dict:
+        """Observable jit-reuse accounting: distinct retained appliers and
+        total executable builds across every bucket served so far."""
+        return {"n_appliers": self.harness.n_appliers,
+                "n_traces": self.harness.n_traces}

@@ -30,8 +30,9 @@ from .result import SolveResult
 _SAFE = lambda x: jnp.where(x == 0, 1, x)
 
 
-def pcg(A: Callable, b, *, x0=None, tol: float = 1e-10, maxiter: int = 500,
+def pcg(A: Callable, b, *, x0=None, tol=1e-10, maxiter: int = 500,
         M: Optional[Callable] = None, multi_rhs: bool | None = None,
+        col_maxiter=None,
         precision: SolverPrecision | str = SolverPrecision()) -> SolveResult:
     """Preconditioned CG for SPD ``A``, S stacked right-hand sides.
 
@@ -43,18 +44,34 @@ def pcg(A: Callable, b, *, x0=None, tol: float = 1e-10, maxiter: int = 500,
     exact shape and must act column-wise over the RHS axis (any linear
     operator does).
 
+    ``tol`` and ``col_maxiter`` may be per-column (S,) vectors — the
+    multi-tenant case where each stacked RHS belongs to a different
+    request.  A column is *frozen* the first time its relative residual
+    drops below its tolerance (or its iteration budget runs out): its
+    alpha/beta are masked to zero from then on, so low-precision
+    recurrence legs cannot drift an already-converged column back above
+    tol while its batch-mates finish.  The loop stops once every column
+    is frozen; ``SolveResult.col_iters[s]`` records the iterations column
+    s actually updated.
+
     Per ``precision``: operator inputs are carried at the apply level,
     steering dots run at the orthogonalize level (accumulated high), and
     x/r/p updates at the recurrence level.  ``precision`` also accepts a
     3-char string ("sds") or ``"auto"`` (per-leg levels derived from
-    ``tol`` via :meth:`SolverPrecision.from_tolerance`).
+    ``tol`` via :meth:`SolverPrecision.from_tolerance` — the tightest
+    column for per-column tolerances).
     """
-    precision = resolve_precision(precision, tol)
+    precision = resolve_precision(precision, float(np.min(tol)))
     if multi_rhs is None:
         multi_rhs = b.ndim >= 3
     squeeze = not multi_rhs
     if squeeze:
         b = b[..., None]
+    S = b.shape[-1]
+    tol_col = np.broadcast_to(np.asarray(tol, np.float64), (S,))
+    budget = (np.full((S,), maxiter, dtype=int) if col_maxiter is None
+              else np.minimum(np.broadcast_to(
+                  np.asarray(col_maxiter, dtype=int), (S,)), maxiter))
     rec_dt = precision.recurrence_dtype()
     app_dt = precision.apply_dtype()
     ortho = precision.orthogonalize
@@ -76,32 +93,53 @@ def pcg(A: Callable, b, *, x0=None, tol: float = 1e-10, maxiter: int = 500,
     b_norm = np.asarray(col_norm(b, ortho), np.float64)
     b_norm = np.where(b_norm == 0, 1.0, b_norm)
 
+    relres = np.asarray(col_norm(r, ortho), np.float64) / b_norm
+    conv = relres < tol_col              # converged columns (stay frozen)
+    frozen = conv | (budget <= 0)        # frozen = converged or out of budget
+    col_iters = np.zeros((S,), dtype=int)
     history = []
-    converged = False
     k = 0
+    if frozen.all() or maxiter == 0:
+        # no iterations will run: report the *initial* residual honestly
+        # instead of the old empty-history/untouched-x contract, which
+        # claimed nothing even when x0 already violated tol.
+        history.append(relres)
     for k in range(1, maxiter + 1):
+        if frozen.all():
+            k -= 1
+            break
+        active = jnp.asarray(~frozen)
         Ap = apply_A(p)
         alpha = rz / _SAFE(col_dot(p, Ap, ortho))
-        x = (x + p * alpha.astype(rec_dt)).astype(rec_dt)
-        r = (r - Ap * alpha.astype(rec_dt)).astype(rec_dt)
-        relres = np.asarray(col_norm(r, ortho), np.float64) / b_norm
+        alpha = jnp.where(active, alpha, 0).astype(rec_dt)
+        x = (x + p * alpha).astype(rec_dt)
+        r = (r - Ap * alpha).astype(rec_dt)
+        relres_new = np.asarray(col_norm(r, ortho), np.float64) / b_norm
+        # frozen columns report the residual they froze at (their r is
+        # untouched, but recompute noise must never un-freeze them)
+        relres = np.where(frozen, relres, relres_new)
         history.append(relres)
-        if bool(relres.max() < tol):
-            converged = True
+        col_iters[~frozen] = k
+        conv |= (~frozen) & (relres < tol_col)
+        frozen = frozen | conv | (budget <= k)
+        if frozen.all():
             break
         z = _user_shaped(M, r).astype(rec_dt) if M is not None else r
         rz_new = col_dot(r, z, ortho)
         beta = rz_new / _SAFE(rz)
-        p = (z + p * beta.astype(rec_dt)).astype(rec_dt)
+        beta = jnp.where(jnp.asarray(~frozen), beta, 0).astype(rec_dt)
+        p = (z + p * beta).astype(rec_dt)
         rz = rz_new
 
     x = x[..., 0] if squeeze else x
-    return SolveResult(x=x, converged=converged, n_iters=k,
-                       residual_history=np.asarray(history))
+    return SolveResult(x=x, converged=bool(conv.all()), n_iters=k,
+                       residual_history=np.asarray(history),
+                       col_iters=col_iters)
 
 
-def cg_normal_equations(op, d_obs, *, damp: float = 0.0, tol: float = 1e-10,
+def cg_normal_equations(op, d_obs, *, damp: float = 0.0, tol=1e-10,
                         maxiter: int = 500, M: Optional[Callable] = None,
+                        col_maxiter=None,
                         precision: SolverPrecision | str = SolverPrecision(),
                         gram=None) -> SolveResult:
     """CGNR: solve min ||F m - d||^2 + damp ||m||^2 via
@@ -115,8 +153,9 @@ def cg_normal_equations(op, d_obs, *, damp: float = 0.0, tol: float = 1e-10,
     iteration instead of a composed rmatmat/matmat pair) whenever ``op``
     exposes ``.gram()``; pass ``gram`` to supply a prebuilt one (e.g. a
     retuned or preconditioning variant).  Plain callable-pair operators
-    fall back to the composed product."""
-    precision = resolve_precision(precision, tol)
+    fall back to the composed product.  ``tol``/``col_maxiter`` may be
+    per-column vectors exactly as in :func:`pcg`."""
+    precision = resolve_precision(precision, float(np.min(tol)))
     rec_dt = precision.recurrence_dtype()
 
     if gram is None and hasattr(op, "gram"):
@@ -130,4 +169,4 @@ def cg_normal_equations(op, d_obs, *, damp: float = 0.0, tol: float = 1e-10,
 
     rhs = op.rmatmat(d_obs).astype(rec_dt)
     return pcg(normal_op, rhs, tol=tol, maxiter=maxiter, M=M,
-               precision=precision)
+               col_maxiter=col_maxiter, precision=precision)

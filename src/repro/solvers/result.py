@@ -23,17 +23,23 @@ class SolveResult:
     multi-RHS solves, no trailing axis for a single vector.
     ``residual_history`` is (n_iters, S) — entry [k, s] is column s's
     relative residual after iteration k (estimated for LSQR).
+    ``col_iters`` (solvers with per-column freezing, i.e. ``pcg``) is the
+    number of iterations each column actually updated before it froze —
+    the per-request iteration count the serving engine demuxes.
     """
 
     x: jax.Array
     converged: bool
     n_iters: int
     residual_history: np.ndarray
+    col_iters: np.ndarray | None = None
 
     @property
     def final_relres(self) -> np.ndarray:
-        """Per-column relative residual at exit, shape (S,).  A solve that
-        never iterated (maxiter=0) has no columns to report: single NaN."""
+        """Per-column relative residual at exit, shape (S,).  ``pcg``
+        records the initial residual even when no iterations run
+        (maxiter=0 guard); a solver with a genuinely empty history
+        reports a single NaN."""
         if len(self.residual_history) == 0:
             return np.full((1,), np.nan)
         return self.residual_history[-1]

@@ -154,15 +154,47 @@ class TuningCache:
             self._data = raw
         return self._data
 
+    @staticmethod
+    def _mergeable(key: str, entry) -> bool:
+        """Is an on-disk entry worth preserving through a merge?  Tuning
+        entries go through the full schema check; dispatch tables through
+        theirs.  Invalid/stale entries are dropped (they would read as
+        misses anyway)."""
+        if key.startswith("dispatch/"):
+            return (isinstance(entry, dict)
+                    and entry.get("version") == SCHEMA_VERSION
+                    and isinstance(entry.get("table"), dict))
+        return _valid_entry(entry)
+
     def save(self) -> None:
-        """Atomic write (tmp + rename) so a crash never corrupts the file."""
+        """Merge-on-write + atomic replace (tmp + rename).
+
+        Two processes tuning *different* keys against the same file must
+        not lose the slower writer's entries: the file is re-read at save
+        time, valid entries another writer landed since our ``_load()``
+        are merged in (our own entries win per-key), and the union is
+        written atomically.  A crash mid-write never corrupts the file;
+        concurrent same-key writers degrade to per-key last-writer-wins,
+        never to whole-file loss."""
         data = self._load()
         self.path.parent.mkdir(parents=True, exist_ok=True)
+        try:
+            on_disk = json.loads(self.path.read_text())
+            if not isinstance(on_disk, dict):
+                on_disk = {}
+        except (FileNotFoundError, ValueError, OSError):
+            on_disk = {}
+        union = dict(on_disk)
+        union.update(data)
+        # only mergeable entries are written back: invalid/stale ones read
+        # as misses anyway, so persisting them is pure garbage retention
+        merged = {k: v for k, v in union.items() if self._mergeable(k, v)}
+        self._data = merged
         fd, tmp = tempfile.mkstemp(dir=self.path.parent,
                                    prefix=self.path.name, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
-                json.dump(data, f, indent=1, sort_keys=True)
+                json.dump(merged, f, indent=1, sort_keys=True)
             os.replace(tmp, self.path)
         except BaseException:
             if os.path.exists(tmp):

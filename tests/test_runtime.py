@@ -234,6 +234,44 @@ def test_serve_engine_batches_and_orders():
     assert all(len(r.tokens) == 5 for r in results)
 
 
+def test_serve_partitions_mixed_extras_batches():
+    """A workload mixing extras-bearing and plain requests used to crash
+    run_batch (``r.extras[k]`` on None) or silently drop later requests'
+    extras; serve() now partitions on the extras signature."""
+    cfg = get_smoke_config("qwen1p5_0p5b")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_seq=64)
+    rng = np.random.default_rng(1)
+    plain = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, 8,
+                                                dtype=np.int32),
+                     max_new_tokens=3) for i in range(2)]
+    # same prompt-length bucket, but carrying extras
+    extra = [Request(uid=2 + i,
+                     prompt=rng.integers(0, cfg.vocab, 8, dtype=np.int32),
+                     max_new_tokens=3,
+                     extras={"aux": np.ones((2,), np.float32)})
+             for i in range(2)]
+    results = eng.serve(plain + extra)
+    assert [r.uid for r in results] == [0, 1, 2, 3]
+    assert all(len(r.tokens) == 3 for r in results)
+
+    # the plain batch is bit-identical to serving the plain requests alone
+    alone = ServeEngine(cfg, params, max_seq=64).serve(plain)
+    for a, b in zip(alone, results[:2]):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_run_batch_rejects_mixed_extras():
+    cfg = get_smoke_config("qwen1p5_0p5b")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_seq=64)
+    prompt = np.arange(8, dtype=np.int32)
+    mixed = [Request(0, prompt, 2),
+             Request(1, prompt, 2, extras={"aux": np.ones((2,), np.float32)})]
+    with pytest.raises(ValueError, match="mixed extras"):
+        eng.run_batch(mixed)
+
+
 def test_serve_greedy_deterministic():
     cfg = get_smoke_config("granite_moe_3b")
     params = api.init_params(cfg, jax.random.PRNGKey(0))

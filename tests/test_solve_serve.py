@@ -1,0 +1,238 @@
+"""Multi-tenant SolveEngine: admission/bucketing, coalesced multi-RHS
+CGNR with per-request demux, warm/cold tuning path, and the observable
+jit-applier-reuse contract (launch counts, not docstrings)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import FFTMatvec, random_unrepresentable, rel_l2
+from repro.runtime import (AdmissionError, SolveEngine, SolveRequest,
+                           operator_fingerprint, tol_bucket)
+from repro.tune import TuningCache
+
+
+def _op(Nt=16, Nd=3, Nm=24, seed=0):
+    F_col = random_unrepresentable(jax.random.PRNGKey(seed),
+                                   (Nt, Nd, Nm)) / np.sqrt(Nm)
+    return FFTMatvec.from_block_column(F_col)
+
+
+def _requests(op, S, tols, seed=1, max_iters=400):
+    """S consistent observations (D = F M_true) as one request each."""
+    M_true = jax.random.normal(jax.random.PRNGKey(seed),
+                               (op.N_m, op.N_t, S), jnp.float64)
+    D = op.matmat(M_true)
+    reqs = [SolveRequest(uid=i, d_obs=np.asarray(D[..., i]),
+                         tol=tols[i % len(tols)], max_iters=max_iters)
+            for i in range(S)]
+    return M_true, reqs
+
+
+# ---------------------------------------------------------------------------
+# admission / bucketing policy
+# ---------------------------------------------------------------------------
+
+def test_tol_bucket_rounds_down_never_looser():
+    for t in (1e-6, 3e-6, 9.99e-6, 1e-8, 5.5e-3, 2.0):
+        b = tol_bucket(t)
+        assert b <= t                       # config never looser than asked
+        assert b > t / 10.0                 # and never absurdly tighter
+    assert tol_bucket(1e-6) == pytest.approx(1e-6)   # boundary maps to itself
+    assert tol_bucket(3e-6) == pytest.approx(1e-6)
+    with pytest.raises(AdmissionError):
+        tol_bucket(0.0)
+    with pytest.raises(AdmissionError):
+        tol_bucket(-1e-6)
+
+
+def test_admission_rejects_unroutable_and_invalid():
+    eng = SolveEngine(_op())
+    bad_shape = SolveRequest(uid=0, d_obs=np.zeros((7, 7)))
+    with pytest.raises(AdmissionError, match="shape"):
+        eng.submit(bad_shape)
+    with pytest.raises(AdmissionError, match="shape"):
+        eng.serve([bad_shape])
+    op = _op()
+    with pytest.raises(AdmissionError):
+        eng.submit(SolveRequest(uid=1, d_obs=np.zeros((op.N_d, op.N_t)),
+                                tol=0.0))
+    with pytest.raises(AdmissionError):
+        eng.submit(SolveRequest(uid=2, d_obs=np.zeros((op.N_d, op.N_t)),
+                                max_iters=-1))
+
+
+def test_ambiguous_operator_shapes_rejected_at_construction():
+    with pytest.raises(ValueError, match="unambiguous"):
+        SolveEngine([_op(seed=0), _op(seed=1)])   # same (N_d, N_t) twice
+
+
+def test_multi_operator_routing_by_shape():
+    op_a, op_b = _op(Nt=16, Nd=3, Nm=24), _op(Nt=8, Nd=4, Nm=12, seed=3)
+    assert operator_fingerprint(op_a) != operator_fingerprint(op_b)
+    eng = SolveEngine([op_a, op_b])
+    _, reqs_a = _requests(op_a, 2, [1e-5])
+    _, reqs_b = _requests(op_b, 2, [1e-5], seed=4)
+    for r in reqs_b:
+        r.uid += 10
+    out = eng.serve(reqs_a + reqs_b)
+    assert [o.uid for o in out] == [0, 1, 10, 11]
+    assert eng.stats["batches"] == 2          # one per operator fingerprint
+    shapes = {o.uid: o.x.shape for o in out}
+    assert shapes[0] == (op_a.N_m, op_a.N_t)
+    assert shapes[10] == (op_b.N_m, op_b.N_t)
+
+
+# ---------------------------------------------------------------------------
+# coalescing correctness: demux per uid, parity with the naive path
+# ---------------------------------------------------------------------------
+
+def test_coalesced_demux_matches_naive_per_uid(tmp_path):
+    op = _op()
+    _, reqs = _requests(op, 4, [1e-6, 3e-6])     # one decade bucket
+    cache = TuningCache(tmp_path / "tune.json")  # shared: same config both
+    eng = SolveEngine(op, cache=cache)
+    out = eng.serve(list(reversed(reqs)))        # arrival order scrambled
+    assert [o.uid for o in out] == [0, 1, 2, 3]  # uid order restored
+    assert all(o.coalesced == 4 for o in out)
+    assert eng.stats["coalesced"] == [4]
+
+    naive = SolveEngine(op, cache=cache).serve(reqs, coalesce=False)
+    assert all(o.coalesced == 1 for o in naive)
+    for o_c, o_n, r in zip(out, naive, reqs):
+        assert o_c.uid == o_n.uid == r.uid
+        assert o_c.config == o_n.config          # same bucket -> same config
+        assert o_c.converged and o_n.converged
+        assert o_c.relres < r.tol and o_n.relres < r.tol
+        # same Krylov from the same start: demuxed column == solo solve
+        # (loose bound: the system is underdetermined, so x agreement is
+        # weaker than the normal-equation residual both paths satisfy)
+        assert rel_l2(o_c.x, o_n.x) < 1e-3
+        assert o_c.residual_history.shape == (o_c.n_iters,)
+
+
+def test_mixed_decades_split_into_buckets():
+    op = _op()
+    _, reqs = _requests(op, 4, [1e-5, 1e-8])
+    eng = SolveEngine(op)
+    out = eng.serve(reqs)
+    assert eng.stats["batches"] == 2
+    assert sorted(eng.stats["coalesced"]) == [2, 2]
+    # bucket-mates serve under one config; a 1e-5 request is never served
+    # under a config selected for a looser tolerance than its own
+    cfg_by_tol = {r.tol: out[r.uid].config for r in reqs}
+    assert len(cfg_by_tol) == 2
+    for o, r in zip(out, reqs):
+        assert o.converged and o.relres < r.tol
+
+
+def test_same_bucket_shares_config_with_tighter_member():
+    """A 3e-6 request rides the 1e-6 bucket: identical config to an
+    explicit 1e-6 request — rounding DOWN, never up."""
+    op = _op()
+    _, reqs = _requests(op, 2, [3e-6, 1e-6])
+    out = SolveEngine(op).serve(reqs)
+    assert out[0].config == out[1].config
+    assert out[0].coalesced == 2
+
+
+def test_max_batch_chunks_large_buckets():
+    op = _op()
+    _, reqs = _requests(op, 5, [1e-5])
+    eng = SolveEngine(op, max_batch=2)
+    out = eng.serve(reqs)
+    assert [o.uid for o in out] == [0, 1, 2, 3, 4]
+    assert eng.stats["coalesced"] == [2, 2, 1]
+    assert all(o.converged for o in out)
+
+
+def test_zero_budget_request_reports_initial_residual():
+    op = _op()
+    _, reqs = _requests(op, 2, [1e-6])
+    reqs[1].max_iters = 0          # out of budget before the first step
+    out = SolveEngine(op).serve(reqs)
+    assert out[0].converged and out[0].n_iters > 0
+    assert not out[1].converged
+    assert out[1].n_iters == 0
+    assert np.isfinite(out[1].relres) and out[1].relres >= 1e-6
+
+
+# ---------------------------------------------------------------------------
+# tolerance -> config resolution: cold tune populates, warm path hits
+# ---------------------------------------------------------------------------
+
+def test_cold_tune_populates_cache_warm_path_hits(tmp_path):
+    path = tmp_path / "tune.json"
+    op = _op()
+    _, reqs = _requests(op, 3, [1e-6])
+
+    eng1 = SolveEngine(op, cache_path=path)
+    out1 = eng1.serve(reqs)
+    assert eng1.stats["cold_tunes"] == 1 and eng1.stats["warm_hits"] == 0
+    assert path.exists()
+
+    # fresh engine + fresh cache object (new-process stand-in): warm path
+    eng2 = SolveEngine(op, cache=TuningCache(path))
+    out2 = eng2.serve(reqs)
+    assert eng2.stats["cold_tunes"] == 0 and eng2.stats["warm_hits"] == 1
+    assert [o.config for o in out2] == [o.config for o in out1]
+    for a, b in zip(out1, out2):
+        assert rel_l2(a.x, b.x) < 1e-10      # identical served solution
+
+
+def test_engine_memo_avoids_repeat_tuning():
+    op = _op()
+    eng = SolveEngine(op)
+    _, reqs = _requests(op, 2, [1e-6])
+    eng.serve(reqs)
+    tunes = eng.stats["cold_tunes"] + eng.stats["warm_hits"]
+    eng.serve(reqs)
+    # second round of the same bucket resolves from the engine memo
+    assert eng.stats["cold_tunes"] + eng.stats["warm_hits"] == tunes
+
+
+# ---------------------------------------------------------------------------
+# jit reuse: one applier per family, re-serving never retraces
+# ---------------------------------------------------------------------------
+
+def test_jit_applier_reuse_across_buckets_and_rounds():
+    op = _op()
+    eng = SolveEngine(op)
+    _, reqs_a = _requests(op, 3, [1e-5])
+    eng.serve(reqs_a)
+    stats1 = eng.jit_stats()
+    # serving coalesced CGNR needs exactly the "mat" (rmatmat) and
+    # "gram" family appliers, shared with the tuner's probes
+    assert stats1["n_appliers"] <= 2
+    assert stats1["n_traces"] >= 1
+
+    # same bucket again: executable-cache hits only, zero new traces
+    _, reqs_a2 = _requests(op, 3, [1e-5], seed=9)
+    eng.serve(reqs_a2)
+    stats2 = eng.jit_stats()
+    assert stats2["n_traces"] == stats1["n_traces"]
+    assert stats2["n_appliers"] == stats1["n_appliers"]
+
+    # a NEW bucket (different config / static args) retraces through the
+    # SAME appliers — applier count must not grow
+    _, reqs_b = _requests(op, 3, [1e-9], seed=10)
+    eng.serve(reqs_b)
+    stats3 = eng.jit_stats()
+    assert stats3["n_appliers"] == stats1["n_appliers"]
+
+    # ... and re-serving that bucket is again trace-free
+    _, reqs_b2 = _requests(op, 3, [1e-9], seed=11)
+    eng.serve(reqs_b2)
+    assert eng.jit_stats()["n_traces"] == stats3["n_traces"]
+
+
+def test_submit_queue_drains_on_serve():
+    op = _op()
+    eng = SolveEngine(op)
+    _, reqs = _requests(op, 2, [1e-5])
+    for r in reqs:
+        eng.submit(r)
+    out = eng.serve()
+    assert [o.uid for o in out] == [0, 1]
+    assert eng.serve() == []                 # queue drained

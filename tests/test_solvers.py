@@ -62,6 +62,96 @@ def test_pcg_preconditioner_helps():
 
 
 # ---------------------------------------------------------------------------
+# Per-column convergence freeze (multi-tenant contract)
+# ---------------------------------------------------------------------------
+
+def test_pcg_freezes_converged_columns():
+    """A column that converges early must stop iterating: its residual
+    history is exactly constant from its freeze point on (alpha/beta are
+    masked, so low-precision recurrence noise cannot drift it back above
+    tol) and col_iters records where it froze."""
+    d = jnp.linspace(1.0, 9.0, 30).astype(jnp.float64)
+    A = jnp.diag(d)
+    # column 0: single eigencomponent -> converges in one iteration;
+    # column 1: full spectrum -> needs many
+    b0 = jnp.zeros((30,), jnp.float64).at[4].set(2.0)
+    b1 = jax.random.normal(jax.random.PRNGKey(0), (30,), jnp.float64)
+    B = jnp.stack([b0, b1], axis=-1)
+    res = solvers.pcg(lambda v: A @ v, B, tol=1e-12, maxiter=200,
+                      multi_rhs=True)
+    assert res.converged
+    assert res.col_iters is not None
+    k0, k1 = int(res.col_iters[0]), int(res.col_iters[1])
+    assert k0 < k1 == res.n_iters
+    h = res.residual_history
+    # frozen column's recorded residual is constant after its freeze
+    np.testing.assert_array_equal(h[k0 - 1:, 0],
+                                  np.full(res.n_iters - k0 + 1, h[k0 - 1, 0]))
+    assert (h[k0 - 1:, 0] < 1e-12).all()
+    # and its solution column is exact despite the batch-mate iterating on
+    assert rel_l2(res.x[:, 0], b0 / d) < 1e-10
+    assert rel_l2(res.x[:, 1], b1 / d) < 1e-10
+
+
+def test_pcg_per_column_tolerances():
+    A = _spd(24, jax.random.PRNGKey(11))
+    X = jax.random.normal(jax.random.PRNGKey(12), (24, 2), jnp.float64)
+    B = A @ X
+    res = solvers.pcg(lambda v: A @ v, B, tol=[1e-2, 1e-10], maxiter=200,
+                      multi_rhs=True)
+    assert res.converged
+    assert int(res.col_iters[0]) < int(res.col_iters[1])
+    final = res.residual_history[-1]
+    assert final[0] < 1e-2 and final[1] < 1e-10
+
+
+def test_pcg_col_maxiter_budget_freezes_column():
+    A = _spd(40, jax.random.PRNGKey(13))
+    X = jax.random.normal(jax.random.PRNGKey(14), (40, 2), jnp.float64)
+    B = A @ X
+    res = solvers.pcg(lambda v: A @ v, B, tol=1e-13, maxiter=300,
+                      col_maxiter=[3, 300], multi_rhs=True)
+    # column 0 out of budget at 3 (not converged); column 1 converged
+    assert int(res.col_iters[0]) == 3
+    assert not res.converged                    # not every column converged
+    h = res.residual_history
+    np.testing.assert_array_equal(
+        h[3:, 0], np.full(len(h) - 3, h[2, 0]))  # frozen, not drifting
+    assert res.residual_history[-1][1] < 1e-13
+
+
+def test_pcg_maxiter0_reports_initial_residual():
+    """maxiter=0 used to return an untouched x with an EMPTY history even
+    when x0 violated tol — now the initial residual is reported."""
+    A = _spd(10, jax.random.PRNGKey(15))
+    x_true = jax.random.normal(jax.random.PRNGKey(16), (10,), jnp.float64)
+    b = A @ x_true
+    res = solvers.pcg(lambda v: A @ v, b, tol=1e-10, maxiter=0)
+    assert res.n_iters == 0 and not res.converged
+    assert res.residual_history.shape == (1, 1)
+    assert res.final_relres[0] == pytest.approx(1.0)    # x0 = 0: relres 1
+    assert rel_l2(res.x, jnp.zeros_like(res.x)) == 0.0  # untouched, honest
+
+    # an x0 that already satisfies tol converges in zero iterations
+    res2 = solvers.pcg(lambda v: A @ v, b, x0=x_true, tol=1e-10, maxiter=0)
+    assert res2.converged and res2.n_iters == 0
+    assert res2.final_relres[0] < 1e-10
+
+
+def test_cgnr_per_column_tol_and_budget():
+    op = _toeplitz_op()
+    M_true = jax.random.normal(jax.random.PRNGKey(17), (op.N_m, op.N_t, 2),
+                               jnp.float64)
+    D = op.matmat(M_true)
+    res = solvers.cg_normal_equations(op, D, tol=[1e-4, 1e-10],
+                                      maxiter=500, col_maxiter=[500, 500])
+    assert res.converged
+    assert int(res.col_iters[0]) <= int(res.col_iters[1])
+    final = res.residual_history[-1]
+    assert final[0] < 1e-4 and final[1] < 1e-10
+
+
+# ---------------------------------------------------------------------------
 # CGNR / LSQR on the Toeplitz operator
 # ---------------------------------------------------------------------------
 

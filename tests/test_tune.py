@@ -402,6 +402,69 @@ def test_cache_key_reflects_workload_details():
     assert k4.to_string() != k64.to_string()
 
 
+def _entry_kw(cfg, t=1.0):
+    rec = ConfigRecord(cfg, 0.0, t, 1.0)
+    return dict(records=[rec], front=[rec], chosen=cfg, tol=1e-6,
+                baseline=cfg, n_lattice=32)
+
+
+def test_cache_save_merges_concurrent_writers(tmp_path):
+    """Two processes tuning DIFFERENT keys against the same file must both
+    survive: save() re-reads the file and merges valid entries instead of
+    dumping the dict loaded at first _load() (last-writer-wins lost the
+    slower writer's work)."""
+    path = tmp_path / "tune.json"
+    cfg = PrecisionConfig.from_string("ddddd")
+    key1 = CacheKey(8, 2, 4, ("d", "s"), "matvec", "cpu:x", "a", "fp1")
+    key2 = CacheKey(16, 3, 8, ("d", "s"), "gram", "cpu:x", "b", "fp1")
+
+    c1, c2 = TuningCache(path), TuningCache(path)
+    c1._load(), c2._load()            # both snapshot the (empty) file
+    c1.put(key1, **_entry_kw(cfg))
+    c1.save()
+    c2.put(key2, **_entry_kw(cfg, t=2.0))
+    c2.save()                          # used to clobber key1
+
+    fresh = TuningCache(path)
+    assert fresh.get(key1) is not None
+    assert fresh.get(key2) is not None
+    # and the merge never resurrects invalid on-disk entries
+    raw = json.loads(path.read_text())
+    raw["zombie"] = {"version": -1}
+    path.write_text(json.dumps(raw))
+    c3 = TuningCache(path)
+    c3._load()
+    c3.put(key1, **_entry_kw(cfg, t=3.0))
+    c3.save()
+    assert "zombie" not in json.loads(path.read_text())
+    # same-key writers degrade to per-key last-writer-wins, never loss
+    final = TuningCache(path)
+    assert final.get(key1)["times"][cfg.to_string()] == 3.0
+    assert final.get(key2) is not None
+
+
+def test_cache_save_merge_preserves_dispatch_entries(tmp_path):
+    """Dispatch tables written by another process survive a merge-on-write
+    save from a cache object that never loaded them."""
+    from repro.backend import DispatchTable, current_backend
+    path = tmp_path / "tune.json"
+    spec = current_backend()
+    c1 = TuningCache(path)
+    c1.put_dispatch(spec, DispatchTable())
+    c1.save()
+
+    cfg = PrecisionConfig.from_string("ddddd")
+    key = CacheKey(8, 2, 4, ("d", "s"), "matvec", "cpu:x", "a", "fp1")
+    c2 = TuningCache(path)     # fresh snapshot happens inside save()
+    c2._data = {}              # simulate a writer that loaded pre-dispatch
+    c2.put(key, **_entry_kw(cfg))
+    c2.save()
+
+    fresh = TuningCache(path)
+    assert fresh.get_dispatch(spec) is not None
+    assert fresh.get(key) is not None
+
+
 def test_cache_synthetic_timer_never_answers_real_runs(tmp_path):
     path = tmp_path / "tune.json"
     op, _, m = small_problem()
