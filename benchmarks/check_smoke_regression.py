@@ -1,0 +1,91 @@
+"""Guard the committed benchmark-smoke artifacts against regression.
+
+The repo commits the smoke-mode ``BENCH_fig4.json`` / ``BENCH_serve.json``
+artifacts; the CI benchmark-smoke job copies them aside, re-runs the
+benches (which overwrite the files in place), and then calls this checker
+to compare the fresh ratios against the committed baselines:
+
+    python -m benchmarks.check_smoke_regression \
+        --baseline-fig4 /tmp/BENCH_fig4.json \
+        --baseline-serve /tmp/BENCH_serve.json
+
+A *ratio* here is a speedup-style metric (higher is better); the check
+fails when a fresh ratio falls below ``(1 - tolerance)`` of its committed
+value (default tolerance 20%, per-key, only keys present in both files —
+so adding a new sweep point never breaks the gate).  Raw wall times are
+deliberately NOT compared: CI runners are too noisy for absolute times,
+but the ratios divide that noise out.
+"""
+
+import argparse
+import json
+import sys
+
+
+def _ratios_serve(d: dict) -> dict[str, float]:
+    # coalesced-vs-naive throughput ratio per RHS width; widths below the
+    # batchable threshold (<16) are excluded — their ratio hovers around
+    # 1.0 by design and is not a regression signal
+    return {f"serve/sweep[{s}].ratio": float(v["ratio"])
+            for s, v in d.get("sweep", {}).items() if int(s) >= 16}
+
+
+def _ratios_fig4(d: dict) -> dict[str, float]:
+    # model-derived speedups: deterministic given the network model, so a
+    # drop means a real change in the partitioning/precision model
+    out = {}
+    for p, v in d.get("model", {}).items():
+        for k in ("mixed_speedup", "comm_aware_speedup"):
+            if k in v:
+                out[f"fig4/model[{p}].{k}"] = float(v[k])
+    return out
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
+    """Keys regressed by more than ``tolerance`` (empty = pass)."""
+    bad = []
+    for key, base in baseline.items():
+        if key not in fresh or base <= 0.0:
+            continue
+        if fresh[key] < (1.0 - tolerance) * base:
+            bad.append(f"{key}: {base:.3f} -> {fresh[key]:.3f} "
+                       f"({fresh[key] / base - 1.0:+.1%})")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-fig4", required=True,
+                    help="committed BENCH_fig4.json (copied aside)")
+    ap.add_argument("--baseline-serve", required=True,
+                    help="committed BENCH_serve.json (copied aside)")
+    ap.add_argument("--fig4", default="BENCH_fig4.json")
+    ap.add_argument("--serve", default="BENCH_serve.json")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional drop per ratio (default 0.20)")
+    args = ap.parse_args(argv)
+
+    load = lambda p: json.load(open(p))
+    baseline = {**_ratios_fig4(load(args.baseline_fig4)),
+                **_ratios_serve(load(args.baseline_serve))}
+    fresh = {**_ratios_fig4(load(args.fig4)),
+             **_ratios_serve(load(args.serve))}
+
+    bad = compare(baseline, fresh, args.tolerance)
+    for key in sorted(baseline):
+        mark = "REGRESSED" if any(b.startswith(key) for b in bad) else "ok"
+        got = fresh.get(key, float("nan"))
+        print(f"{key}: baseline={baseline[key]:.3f} fresh={got:.3f} [{mark}]")
+    if bad:
+        print(f"\n{len(bad)} smoke ratio(s) regressed >"
+              f"{args.tolerance:.0%}:", file=sys.stderr)
+        for b in bad:
+            print(f"  {b}", file=sys.stderr)
+        return 1
+    print(f"all {len(baseline)} smoke ratios within {args.tolerance:.0%} "
+          f"of the committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

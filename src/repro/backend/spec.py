@@ -49,6 +49,12 @@ class BackendSpec:
     must honor; ``peak_flops``/``hbm_bandwidth``/``link_bandwidth`` feed
     the roofline model (``launch.roofline``); ``default_block_n``/
     ``default_block_s`` seed the dispatch table's tile sizes.
+
+    ``tile_precision`` gates the tile-centric mixed-precision GEMM paths
+    (DESIGN.md §8): whether this backend's Phase-3 lowerings honor a
+    per-tile precision map.  Requesting ``tile_map=`` on a backend
+    without it raises :class:`UnsupportedOnBackend` (explicit request,
+    never a silent downgrade).
     """
 
     name: str
@@ -58,6 +64,7 @@ class BackendSpec:
     pallas_interpret: bool = False
     pallas_f64: bool = False
     reference: bool = False
+    tile_precision: bool = False
     sublane: int = 8
     lane: int = 128
     default_block_n: int = 512
@@ -88,18 +95,22 @@ class BackendSpec:
 
 TPU_PALLAS = BackendSpec(
     name="tpu-pallas", platform="tpu", pallas=True, pallas_f64=False,
+    tile_precision=True,
     peak_flops=197e12, hbm_bandwidth=819e9, link_bandwidth=50e9)
 
 # pallas=False: the SBGEMV/SBGEMM kernels lower through the TPU Mosaic
 # pipeline (kernels/_compat.py builds pltpu CompilerParams) and do not
 # run on the Triton backend yet — GPU auto-dispatch takes the traffic-
 # fused XLA path; flip this when a GPU build of the kernels lands.
+# tile_precision=False for the same reason: the tiled kernels are Mosaic
+# lowerings, and the XLA fallback's pre-quantize pass has not been
+# validated on the Triton pipeline — flip both together.
 GPU_PALLAS = BackendSpec(
     name="gpu-pallas", platform="gpu", pallas=False, pallas_f64=False,
     peak_flops=1307e12, hbm_bandwidth=5300e9, link_bandwidth=64e9)
 
 CPU_XLA = BackendSpec(
-    name="cpu-xla", platform="cpu", pallas=False,
+    name="cpu-xla", platform="cpu", pallas=False, tile_precision=True,
     peak_flops=1e12, hbm_bandwidth=100e9, link_bandwidth=25e9)
 
 # CPU validation backend: the Pallas kernels via the interpreter.  Slow by
@@ -110,7 +121,7 @@ CPU_INTERPRET = dataclasses.replace(
 # Forced reference backend: oracle lowerings on whatever hardware is under
 # us (platform filled at resolve time).  CI's numerical-parity leg.
 XLA_REF = BackendSpec(
-    name="xla-ref", platform="", reference=True,
+    name="xla-ref", platform="", reference=True, tile_precision=True,
     peak_flops=1e12, hbm_bandwidth=100e9, link_bandwidth=25e9)
 
 BUILTIN_SPECS = {s.name: s for s in

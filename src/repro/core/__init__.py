@@ -11,8 +11,9 @@ Public API:
     GaussianInverseProblem                     — Bayesian-inversion driver
 """
 
-from .precision import (PrecisionConfig, all_configs, machine_eps,  # noqa: F401
-                        config_le, config_lt, level_index, max_level,
+from .precision import (PrecisionConfig, TileMap, all_configs,  # noqa: F401
+                        machine_eps, config_le, config_lt, level_index,
+                        max_level, tile_le,
                         DOUBLE, SINGLE, TPU_BASELINE, TPU_FAST,
                         PAPER_OPT_F, PAPER_OPT_FSTAR, PAPER_OPT_F_LARGE,
                         TPU_OPT_F)

@@ -20,19 +20,47 @@ cast at the reduce level, the depth-log2(p) reduction tree at an optional
 ``comm_level`` (the reduced-precision-communication knob, DESIGN.md §5).
 With ``comm_level=None`` both pieces use the reduce level and the bound
 is exactly the old one.
+
+Third extension (tile-centric mixed precision, DESIGN.md §8): a config
+carrying a :class:`repro.core.precision.TileMap` splits the gemv term per
+operand tile, ``c3 * n_local * sum_t w_t * eps(level_t)``, where the
+weights ``w_t`` (normalized block-norm fractions of ``F_hat``, summing to
+1 — uniform when not supplied) price how much of the contraction mass
+each tile carries.  A uniform map at level L reduces the term exactly to
+the phase-level ``c3 * eps(L') * n_local`` with ``L' = min(L, gemv)``.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Iterable
+from typing import Iterable, Optional, Sequence
 
 from .precision import PrecisionConfig, machine_eps
 
 
+def _normalized_weights(tile_weights, shape: tuple[int, int]):
+    """Flatten + normalize per-tile weights to sum 1 (uniform when None);
+    validates the grid shape against the tile map's."""
+    R, C = shape
+    if tile_weights is None:
+        return [1.0 / (R * C)] * (R * C)
+    rows = [list(r) for r in tile_weights]
+    if len(rows) != R or any(len(r) != C for r in rows):
+        raise ValueError(f"tile_weights shape {len(rows)}x"
+                         f"{len(rows[0]) if rows else 0} does not match the "
+                         f"tile map's {R}x{C}")
+    flat = [max(float(w), 0.0) for r in rows for w in r]
+    total = sum(flat)
+    if total <= 0.0:
+        return [1.0 / (R * C)] * (R * C)
+    return [w / total for w in flat]
+
+
 def phase_factors(N_t: int, N_d: int, N_m: int, p_r: int = 1, p_c: int = 1,
                   *, adjoint: bool = False,
-                  variant: str | None = None) -> dict[str, float]:
+                  variant: str | None = None,
+                  tile_shape: Optional[tuple[int, int]] = None,
+                  tile_weights: Optional[Sequence] = None) -> dict[str, float]:
     """Structural multiplier of each phase's unit roundoff in eq. (6).
 
     The bound is ``kappa * (setup + sum_p c_p * e_p * factor_p)`` with the
@@ -55,13 +83,20 @@ def phase_factors(N_t: int, N_d: int, N_m: int, p_r: int = 1, p_c: int = 1,
     (communication) precision — see :func:`relative_error_bound`'s
     ``comm_level``.  Their sum at one level is the old ``1 + log2(p)``
     factor.
+
+    ``tile_shape`` (an ``(R_tiles, C_tiles)`` grid) additionally splits
+    the gemv factor per operand tile under ``"gemv_tiles"``: a flat
+    row-major tuple ``w_t * factor_gemv`` with the normalized
+    ``tile_weights`` (uniform when None) — the per-tile term of the
+    tile-aware eq.-(6) extension.  The tuple always sums back to the
+    phase-level ``"gemv"`` factor.
     """
     log_nt = math.log2(max(N_t, 2))
     n_m = math.ceil(N_m / max(p_c, 1))
     n_d = math.ceil(N_d / max(p_r, 1))
     if variant in ("gram", "gram_data"):
         p_red = max(p_r, 1) * max(p_c, 1)
-        return {
+        f = {
             "pad": 1.0,
             "fft": 2.0 * log_nt,
             "gemv": float(n_m + n_d),
@@ -69,23 +104,28 @@ def phase_factors(N_t: int, N_d: int, N_m: int, p_r: int = 1, p_c: int = 1,
             "reduce": 1.0,
             "comm": math.log2(p_red) if p_red > 1 else 0.0,
         }
-    if variant is not None and variant not in ("matvec", "rmatvec",
-                                               "matmat", "rmatmat"):
-        raise ValueError(f"unknown variant {variant!r}")
-    if variant is not None:
-        adjoint = variant in ("rmatvec", "rmatmat")
-    if adjoint:
-        n_local, p_red = n_d, max(p_r, 1)
     else:
-        n_local, p_red = n_m, max(p_c, 1)
-    return {
-        "pad": 1.0,
-        "fft": log_nt,
-        "gemv": float(n_local),
-        "ifft": log_nt,
-        "reduce": 1.0,
-        "comm": math.log2(p_red) if p_red > 1 else 0.0,
-    }
+        if variant is not None and variant not in ("matvec", "rmatvec",
+                                                   "matmat", "rmatmat"):
+            raise ValueError(f"unknown variant {variant!r}")
+        if variant is not None:
+            adjoint = variant in ("rmatvec", "rmatmat")
+        if adjoint:
+            n_local, p_red = n_d, max(p_r, 1)
+        else:
+            n_local, p_red = n_m, max(p_c, 1)
+        f = {
+            "pad": 1.0,
+            "fft": log_nt,
+            "gemv": float(n_local),
+            "ifft": log_nt,
+            "reduce": 1.0,
+            "comm": math.log2(p_red) if p_red > 1 else 0.0,
+        }
+    if tile_shape is not None:
+        w = _normalized_weights(tile_weights, tuple(tile_shape))
+        f["gemv_tiles"] = tuple(wt * f["gemv"] for wt in w)
+    return f
 
 
 def relative_error_bound(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
@@ -93,7 +133,8 @@ def relative_error_bound(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
                          kappa: float = 1.0, input_level: str = "d",
                          constants: dict | None = None,
                          variant: str | None = None,
-                         comm_level: str | None = None) -> float:
+                         comm_level: str | None = None,
+                         tile_weights: Optional[Sequence] = None) -> float:
     """Evaluate eq. (6).  ``input_level`` is the precision at which the
     input vector is exactly representable (paper: double).  ``constants``
     may override the O(1) factors c1..c5 and cF (default 1.0).
@@ -103,7 +144,12 @@ def relative_error_bound(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
     ``comm_level`` is the reduced-precision-communication knob: the
     depth-``log2(p)`` reduction-tree term uses its unit roundoff instead
     of the reduce phase's (None = reductions at the reduce level, the old
-    bound exactly)."""
+    bound exactly).
+    For a config carrying a tile map the gemv term becomes the tile-aware
+    sum ``c3 * sum_t eps(eff_level_t) * w_t * factor_gemv`` with
+    ``tile_weights`` the (optional) per-tile block-norm fractions of
+    ``F_hat`` — uniform maps reduce the term exactly to the phase-level
+    one."""
     c = {"c1": 1.0, "c2": 1.0, "c3": 1.0, "c4": 1.0, "c5": 1.0, "cF": 1.0}
     if constants:
         c.update(constants)
@@ -117,15 +163,25 @@ def relative_error_bound(cfg: PrecisionConfig, N_t: int, N_d: int, N_m: int,
     lossless = machine_eps(cfg.pad) <= machine_eps(input_level)
     c1 = 0.0 if lossless else c["c1"]
 
+    tile_shape = cfg.tiles.shape if cfg.tiles is not None else None
     f = phase_factors(N_t, N_d, N_m, p_r, p_c, adjoint=adjoint,
-                      variant=variant)
+                      variant=variant, tile_shape=tile_shape,
+                      tile_weights=tile_weights)
     amp = kappa ** 2 if variant in ("gram", "gram_data") else kappa
+
+    if cfg.tiles is not None:
+        eff = cfg.gemv_tile_levels()
+        gemv_term = sum(machine_eps(lvl) * f_t
+                        for lvl, f_t in zip((l for row in eff for l in row),
+                                            f["gemv_tiles"]))
+    else:
+        gemv_term = e["gemv"] * f["gemv"]
 
     return amp * (c1 * e["pad"] * f["pad"]
                   + c["cF"] * e_setup * f["fft"]
                   + c["c2"] * e["fft"] * f["fft"]
                   + c["c4"] * e["ifft"] * f["ifft"]
-                  + c["c3"] * e["gemv"] * f["gemv"]
+                  + c["c3"] * gemv_term
                   + c["c5"] * (e["reduce"] * f["reduce"]
                                + e_comm * f["comm"]))
 

@@ -144,6 +144,12 @@ class Stage:
     ``groups``     psum: static device count per axis in ``axis`` (tuple,
                    same order).  Optional; lets the reduce-scatter lowering
                    check tiling divisibility at trace time.
+    ``tile_map``   gemv: per-tile *effective* storage levels (a
+                   :class:`repro.core.precision.TileMap`, already min'd
+                   against the stage level) quantizing the operand tiles —
+                   tile-centric mixed precision, DESIGN.md §8.  On sharded
+                   runs the map's grid partitions the *local* operand
+                   shard element-wise.
     """
 
     kind: str
@@ -154,6 +160,7 @@ class Stage:
     axis: Union[str, Tuple[str, ...], None] = None
     collective: str = "psum"
     groups: Optional[Tuple[int, ...]] = None
+    tile_map: Optional[prec.TileMap] = None
 
     def __post_init__(self):
         if self.kind not in STAGE_KINDS:
@@ -239,10 +246,12 @@ def _gemv(stage, x, operands, N_t, S, opts):
     if S == 1:
         return kops.sbgemv(A_re.astype(dt), A_im.astype(dt), x_re, x_im,
                            mode, out_dtype=dt, backend=opts.spec,
-                           dispatch=table, block_n=opts.block_n)
+                           dispatch=table, block_n=opts.block_n,
+                           tile_map=stage.tile_map)
     return kops.sbgemm(A_re.astype(dt), A_im.astype(dt), x_re, x_im, mode,
                        out_dtype=dt, backend=opts.spec, dispatch=table,
-                       block_n=opts.block_n, block_s=opts.block_s)
+                       block_n=opts.block_n, block_s=opts.block_s,
+                       tile_map=stage.tile_map)
 
 
 def _ifft(stage, x, operands, N_t, S, opts):
@@ -416,6 +425,15 @@ def _psum_stage(level: str, axis, collective: str,
                  collective=collective, groups=groups)
 
 
+def _gemv_tiles(cfg: PrecisionConfig, operand: str = "F"):
+    """The gemv stage's tile map: the config's, min'd against the gemv
+    level.  Only the F operand carries one — the map is derived from
+    F_hat's block norms and says nothing about precomputed G blocks."""
+    if cfg.tiles is None or operand != "F":
+        return None
+    return prec.TileMap(cfg.tiles.effective(cfg.gemv))
+
+
 def matvec_plan(cfg: PrecisionConfig, *, adjoint: bool = False,
                 psum_axis=None, operand: str = "F",
                 collective: str = "psum",
@@ -436,7 +454,8 @@ def matvec_plan(cfg: PrecisionConfig, *, adjoint: bool = False,
         Stage("pad", cfg.pad),
         Stage("fft", cfg.fft),
         Stage("reorder", cfg.reorder_level("fft", "gemv"), to_tosi=True),
-        Stage("gemv", cfg.gemv, adjoint=adjoint, operand=operand),
+        Stage("gemv", cfg.gemv, adjoint=adjoint, operand=operand,
+              tile_map=_gemv_tiles(cfg, operand)),
         Stage("reorder", cfg.reorder_level("gemv", "ifft"), to_tosi=False),
         Stage("ifft", cfg.ifft),
         Stage("unpad", cfg.reduce),
@@ -494,7 +513,8 @@ def gram_plan(cfg: PrecisionConfig, *, space: str = "parameter",
         Stage("pad", cfg.pad),
         Stage("fft", cfg.fft),
         Stage("reorder", cfg.reorder_level("fft", "gemv"), to_tosi=True),
-        Stage("gemv", cfg.gemv, adjoint=first_adjoint),
+        Stage("gemv", cfg.gemv, adjoint=first_adjoint,
+              tile_map=_gemv_tiles(cfg)),
     ]
     if mid_psum_axis is not None:
         stages.append(_psum_stage(mid_level, mid_psum_axis, collective,
@@ -505,7 +525,8 @@ def gram_plan(cfg: PrecisionConfig, *, space: str = "parameter",
         Stage("mask", prec.min_level(cfg.ifft, cfg.fft)),
         Stage("fft", cfg.fft),
         Stage("reorder", cfg.reorder_level("fft", "gemv"), to_tosi=True),
-        Stage("gemv", cfg.gemv, adjoint=not first_adjoint),
+        Stage("gemv", cfg.gemv, adjoint=not first_adjoint,
+              tile_map=_gemv_tiles(cfg)),
         Stage("reorder", cfg.reorder_level("gemv", "ifft"), to_tosi=False),
         Stage("ifft", cfg.ifft),
         Stage("unpad", cfg.reduce),

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Iterator, Sequence
+from typing import Iterator, Optional, Sequence
 
 import jax.numpy as jnp
 
@@ -69,11 +69,85 @@ def max_level(levels: Sequence[str]) -> str:
 
 
 @dataclasses.dataclass(frozen=True)
+class TileMap:
+    """Static per-tile precision levels for the Phase-3 GEMM (tile-centric
+    mixed precision, DESIGN.md §8).
+
+    ``levels`` is a small ``(R_tiles, C_tiles)`` grid of ladder levels: the
+    row axis evenly partitions the frequency-bin (batch) axis of ``F_hat``,
+    the column axis its long model axis ``N_m``.  A cell says at which
+    *storage* level the kernels may quantize that tile of the operand
+    before contracting — accumulation always stays in the carrier dtype
+    (the gemv phase's), so the effective level of a cell is
+    ``min(cell, gemv)`` and a map can only ever *drop* precision.
+
+    Frozen + tuple-backed: hashable, so tile-mapped configs remain valid
+    jit static arguments and cache-key components.
+    """
+
+    levels: tuple
+
+    def __post_init__(self):
+        rows = tuple(tuple(r) for r in self.levels)
+        if not rows or not rows[0]:
+            raise ValueError("tile map must be non-empty")
+        width = len(rows[0])
+        for r in rows:
+            if len(r) != width:
+                raise ValueError("ragged tile map")
+            for lvl in r:
+                if lvl not in _LEVELS:
+                    raise ValueError(f"bad tile precision level {lvl!r}")
+        object.__setattr__(self, "levels", rows)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (len(self.levels), len(self.levels[0]))
+
+    # -- string codec (the cache-key ``;tiles=`` detail) --------------------
+    def to_string(self) -> str:
+        return "|".join("".join(r) for r in self.levels)
+
+    @classmethod
+    def from_string(cls, s: str) -> "TileMap":
+        return cls(tuple(tuple(row) for row in s.split("|")))
+
+    @classmethod
+    def uniform(cls, level: str, shape: tuple[int, int] = (1, 1)) -> "TileMap":
+        return cls(tuple((level,) * shape[1] for _ in range(shape[0])))
+
+    def is_uniform(self) -> bool:
+        flat = {lvl for row in self.levels for lvl in row}
+        return len(flat) == 1
+
+    def min_level(self) -> str:
+        return min((l for row in self.levels for l in row), key=_LEVELS.index)
+
+    def effective(self, gemv_level: str) -> tuple:
+        """Per-cell effective storage levels: ``min(cell, gemv)``."""
+        return tuple(tuple(min_level(l, gemv_level) for l in row)
+                     for row in self.levels)
+
+
+def tile_le(a: TileMap, b: TileMap) -> bool:
+    """Pointwise domination: ``a <= b`` iff every cell of ``a`` is at a
+    level no higher than ``b``'s (same shape required)."""
+    if a.shape != b.shape:
+        return False
+    return all(_LEVELS.index(la) <= _LEVELS.index(lb)
+               for ra, rb in zip(a.levels, b.levels)
+               for la, lb in zip(ra, rb))
+
+
+@dataclasses.dataclass(frozen=True)
 class PrecisionConfig:
     """Precision level of each of the five FFTMatvec phases.
 
     Phase order matches the paper: (1) broadcast+pad, (2) FFT, (3) SBGEMV,
-    (4) IFFT, (5) unpad+reduce.
+    (4) IFFT, (5) unpad+reduce.  ``tiles`` optionally refines the gemv
+    phase below phase granularity: a :class:`TileMap` quantizing individual
+    Phase-3 operand tiles (carrier accumulation unchanged) — ``None`` is
+    the phase-uniform config, exactly the paper's lattice.
     """
 
     pad: str = "d"
@@ -81,22 +155,30 @@ class PrecisionConfig:
     gemv: str = "d"
     ifft: str = "d"
     reduce: str = "d"
+    tiles: Optional[TileMap] = None
 
     def __post_init__(self):
         for p in PHASES:
             lvl = getattr(self, p)
             if lvl not in _LEVELS:
                 raise ValueError(f"bad precision level {lvl!r} for phase {p!r}")
+        if self.tiles is not None and not isinstance(self.tiles, TileMap):
+            object.__setattr__(self, "tiles", TileMap(self.tiles))
 
     # -- paper-style string codec ------------------------------------------
     @classmethod
     def from_string(cls, s: str) -> "PrecisionConfig":
-        if len(s) != 5:
+        base, sep, tail = s.partition(";tiles=")
+        if len(base) != 5:
             raise ValueError(f"precision string must have 5 chars, got {s!r}")
-        return cls(*s)
+        tiles = TileMap.from_string(tail) if sep else None
+        return cls(*base, tiles=tiles)
 
     def to_string(self) -> str:
-        return "".join(getattr(self, p) for p in PHASES)
+        s = "".join(getattr(self, p) for p in PHASES)
+        if self.tiles is not None:
+            s += f";tiles={self.tiles.to_string()}"
+        return s
 
     def levels(self) -> tuple[str, ...]:
         return tuple(getattr(self, p) for p in PHASES)
@@ -116,19 +198,54 @@ class PrecisionConfig:
     def replace(self, **kw) -> "PrecisionConfig":
         return dataclasses.replace(self, **kw)
 
-    def cost_rank(self) -> int:
+    def gemv_tile_levels(self) -> Optional[tuple]:
+        """Effective per-tile gemv storage levels (``min(cell, gemv)``),
+        or None for a phase-uniform config."""
+        if self.tiles is None:
+            return None
+        return self.tiles.effective(self.gemv)
+
+    def cost_rank(self) -> float:
         """Sum of per-phase ladder indices — a model-level cost proxy that
-        is strictly monotone under raising any phase's precision."""
-        return sum(_LEVELS.index(getattr(self, p)) for p in PHASES)
+        is strictly monotone under raising any phase's precision.  A tile
+        map replaces the gemv index by the *mean* effective tile index, so
+        mixed-tile configs rank strictly cheaper than their uniform base."""
+        rank = sum(_LEVELS.index(getattr(self, p)) for p in PHASES)
+        eff = self.gemv_tile_levels()
+        if eff is not None:
+            flat = [_LEVELS.index(l) for row in eff for l in row]
+            rank += sum(flat) / len(flat) - _LEVELS.index(self.gemv)
+        return rank
+
+
+def _gemv_cells_le(a: PrecisionConfig, b: PrecisionConfig) -> bool:
+    """gemv-phase comparison cell-wise (tile maps refine the phase level)."""
+    ea, eb = a.gemv_tile_levels(), b.gemv_tile_levels()
+    if ea is None and eb is None:
+        return _LEVELS.index(a.gemv) <= _LEVELS.index(b.gemv)
+    if ea is None:
+        return all(_LEVELS.index(a.gemv) <= _LEVELS.index(l)
+                   for row in eb for l in row)
+    if eb is None:
+        return all(_LEVELS.index(l) <= _LEVELS.index(b.gemv)
+                   for row in ea for l in row)
+    if a.tiles.shape != b.tiles.shape:
+        return False              # different grids: incomparable
+    return all(_LEVELS.index(la) <= _LEVELS.index(lb)
+               for ra, rb in zip(ea, eb) for la, lb in zip(ra, rb))
 
 
 def config_le(a: PrecisionConfig, b: PrecisionConfig) -> bool:
     """Lattice partial order: ``a <= b`` iff every phase of ``a`` runs at a
     level no higher than ``b``'s.  Under the eq.-(6) error model ``a`` is
     then no more accurate than ``b``, and under any cost model that is
-    monotone in per-phase precision ``a`` is no more expensive."""
-    return all(_LEVELS.index(getattr(a, p)) <= _LEVELS.index(getattr(b, p))
-               for p in PHASES)
+    monotone in per-phase precision ``a`` is no more expensive.  Tile maps
+    refine the gemv comparison cell-wise (same-shape maps compare
+    pointwise; different grids are incomparable)."""
+    if not all(_LEVELS.index(getattr(a, p)) <= _LEVELS.index(getattr(b, p))
+               for p in PHASES if p != "gemv"):
+        return False
+    return _gemv_cells_le(a, b)
 
 
 def config_lt(a: PrecisionConfig, b: PrecisionConfig) -> bool:

@@ -30,9 +30,10 @@ spelling is ``backend="cpu-interpret"`` +
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.backend import (DispatchTable, TPU_PALLAS, default_table,
-                           resolve_backend)
+from repro.backend import (DispatchTable, TPU_PALLAS, UnsupportedOnBackend,
+                           default_table, resolve_backend)
 from repro.backend.dispatch import DEFAULT_SHORT_WIDE_RATIO
 
 from . import ref as _ref
@@ -87,14 +88,22 @@ def _sbgemv_xla_fused(A_re, A_im, x_re, x_im, mode: str):
 
 
 def sbgemv(A_re, A_im, x_re, x_im, mode: str = "N", *, out_dtype=None,
-           backend=None, dispatch=None, block_n: int | None = None):
+           backend=None, dispatch=None, block_n: int | None = None,
+           tile_map=None):
     """Strided-batched complex GEMV on split planes, backend-dispatched.
 
     A planes (B, m, n); mode "N": x (B, n) -> y (B, m); "T"/"H": x (B, m)
     -> y (B, n).  Returns (y_re, y_im) in ``out_dtype`` (default: A dtype).
     ``backend``/``dispatch`` select the lowering (None = probed backend /
-    its default table).
+    its default table).  ``tile_map`` routes through the tiled SBGEMM
+    path (a GEMV is the S=1 column panel — same kernels, same oracle).
     """
+    if tile_map is not None:
+        y_re, y_im = sbgemm(A_re, A_im, x_re[..., None], x_im[..., None],
+                            mode, out_dtype=out_dtype, backend=backend,
+                            dispatch=dispatch, block_n=block_n,
+                            tile_map=tile_map)
+        return y_re[..., 0], y_im[..., 0]
     B, m, n = A_re.shape
     out_dtype = out_dtype or A_re.dtype
     spec, table = resolve_backend_dispatch(backend, dispatch)
@@ -125,8 +134,14 @@ def sbgemv(A_re, A_im, x_re, x_im, mode: str = "N", *, out_dtype=None,
 
 
 def sbgemv_real(A, x, mode: str = "N", *, out_dtype=None,
-                backend=None, dispatch=None, block_n: int | None = None):
+                backend=None, dispatch=None, block_n: int | None = None,
+                tile_map=None):
     """Real strided-batched GEMV with the same dispatch logic."""
+    if tile_map is not None:
+        y = sbgemm_real(A, x[..., None], mode, out_dtype=out_dtype,
+                        backend=backend, dispatch=dispatch,
+                        block_n=block_n, tile_map=tile_map)
+        return y[..., 0]
     B, m, n = A.shape
     out_dtype = out_dtype or A.dtype
     spec, table = resolve_backend_dispatch(backend, dispatch)
@@ -180,6 +195,52 @@ def unpad_cast(x, keep: int, out_dtype, *, backend=None, dispatch=None,
 
 
 # ---------------------------------------------------------------------------
+# Tile-centric mixed precision plumbing (DESIGN.md §8).
+#
+# ``tile_map`` on the SBGEMM family is a TileMap (or raw tuple-of-tuples of
+# ladder levels) whose (R, C) grid partitions the operand's batch axis B
+# and minor axis n element-wise (kernels/ref.py defines the ground truth).
+# Two lowerings, numerically identical:
+#   aligned     each kernel column tile sits inside one map cell -> pass a
+#               per-(b, tile) int32 level array to the tiled Pallas kernels,
+#               which quantize the resident A tile in VMEM;
+#   misaligned  (or non-Pallas path) -> round-trip A element-wise up front
+#               and run the plain kernels on the quantized planes.
+# ---------------------------------------------------------------------------
+
+
+def _check_tile_support(spec, tile_map):
+    if tile_map is not None and not spec.tile_precision:
+        raise UnsupportedOnBackend(
+            f"backend {spec.name!r} does not support tile-centric "
+            f"precision (tile_map=); see BackendSpec.tile_precision")
+
+
+def _quantize_planes_elementwise(tile_map, *planes):
+    """Element-wise pre-quantization fallback — the oracle semantics."""
+    B, _, n = planes[0].shape
+    idx = _ref.expand_tile_levels(tile_map, B, n)
+    out = _ref.quantize_tile_planes(idx, *planes)
+    return out if isinstance(out, tuple) else (out,)
+
+
+def _tile_lvl_per_block(tile_map, B: int, n: int, bn: int):
+    """Per-(batch, kernel-tile) int32 level array for the tiled kernels,
+    or None when the ``bn``-column kernel grid does not align with the
+    map's cells.  Padded columns (n -> round_up(n, bn)) inherit the last
+    logical column's level — they are zeros, so any level is exact."""
+    idx = _ref.expand_tile_levels(tile_map, B, n)          # (B, n) int32
+    n_pad = round_up(n, bn)
+    if n_pad > n:
+        idx = np.concatenate(
+            [idx, np.repeat(idx[:, -1:], n_pad - n, axis=1)], axis=1)
+    blocks = idx.reshape(B, n_pad // bn, bn)
+    if not (blocks == blocks[:, :, :1]).all():
+        return None
+    return jnp.asarray(blocks[:, :, 0], dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
 # Multi-RHS (block) dispatch: SBGEMM.  Same transition-point heuristic as
 # the GEMV path — the RHS axis only raises arithmetic intensity, so the
 # shapes that favored the custom kernel still do.
@@ -203,48 +264,77 @@ def _sbgemm_xla_fused(A_re, A_im, X_re, X_im, mode: str):
 
 def sbgemm(A_re, A_im, X_re, X_im, mode: str = "N", *, out_dtype=None,
            backend=None, dispatch=None, block_n: int | None = None,
-           block_s: int | None = None):
+           block_s: int | None = None, tile_map=None):
     """Strided-batched complex GEMM (multi-RHS GEMV) on split planes.
 
     A planes (B, m, n); mode "N": X (B, n, S) -> Y (B, m, S); "T"/"H":
     X (B, m, S) -> Y (B, n, S).  The RHS axis S is tiled by ``block_s``
     (padded to a sublane multiple when smaller).  Returns (Y_re, Y_im) in
     ``out_dtype`` (default: A dtype).
+
+    ``tile_map`` quantizes A per tile before the contraction (X and the
+    accumulator stay in the carrier dtype) — the tile-centric mixed
+    precision path, gated by ``BackendSpec.tile_precision``.
     """
     B, m, n = A_re.shape
     S = X_re.shape[2]
     out_dtype = out_dtype or A_re.dtype
     spec, table = resolve_backend_dispatch(backend, dispatch)
+    _check_tile_support(spec, tile_map)
     path = table.gemv_path(m, n, mode, A_re.dtype, spec)
     if path != "pallas":
-        fn = _ref.sbgemm_complex_ref if path == "ref" else _sbgemm_xla_fused
-        Y_re, Y_im = fn(A_re, A_im, X_re, X_im, mode)
+        if tile_map is not None:
+            if path == "ref":
+                Y_re, Y_im = _ref.sbgemm_tiled_ref(A_re, A_im, X_re, X_im,
+                                                   tile_map, mode)
+            else:
+                Ar, Ai = _quantize_planes_elementwise(tile_map, A_re, A_im)
+                Y_re, Y_im = _sbgemm_xla_fused(Ar, Ai, X_re, X_im, mode)
+        else:
+            fn = (_ref.sbgemm_complex_ref if path == "ref"
+                  else _sbgemm_xla_fused)
+            Y_re, Y_im = fn(A_re, A_im, X_re, X_im, mode)
         return Y_re.astype(out_dtype), Y_im.astype(out_dtype)
 
     bn = min(block_n or spec.default_block_n, max(spec.lane, n))
     bs = min(block_s or spec.default_block_s, round_up(S, spec.sublane))
     itp = spec.pallas_interpret
+    lvl = None
+    if tile_map is not None:
+        lvl = _tile_lvl_per_block(tile_map, B, n, bn)
+        if lvl is None:     # cells cut through kernel tiles: pre-quantize
+            A_re, A_im = _quantize_planes_elementwise(tile_map, A_re, A_im)
     (Ar, Ai), _ = pad_planes((A_re, A_im), 1, spec.sublane)
     (Ar, Ai), n0 = pad_planes((Ar, Ai), 2, bn)
     if mode == "N":
         (Xr, Xi), _ = pad_planes((X_re, X_im), 1, bn)
         (Xr, Xi), _ = pad_planes((Xr, Xi), 2, bs)
-        Y_re, Y_im = _sbgemv.sbgemm_n_complex(Ar, Ai, Xr, Xi, block_n=bn,
-                                              block_s=bs, interpret=itp)
+        if lvl is not None:
+            Y_re, Y_im = _sbgemv.sbgemm_n_complex_tiled(
+                Ar, Ai, Xr, Xi, lvl, block_n=bn, block_s=bs, interpret=itp)
+        else:
+            Y_re, Y_im = _sbgemv.sbgemm_n_complex(Ar, Ai, Xr, Xi, block_n=bn,
+                                                  block_s=bs, interpret=itp)
         Y_re, Y_im = Y_re[:, :m, :S], Y_im[:, :m, :S]
     else:
         (Xr, Xi), _ = pad_planes((X_re, X_im), 1, spec.sublane)
         (Xr, Xi), _ = pad_planes((Xr, Xi), 2, bs)
-        Y_re, Y_im = _sbgemv.sbgemm_th_complex(Ar, Ai, Xr, Xi,
-                                               conj=(mode == "H"),
-                                               block_n=bn, block_s=bs,
-                                               interpret=itp)
+        if lvl is not None:
+            Y_re, Y_im = _sbgemv.sbgemm_th_complex_tiled(
+                Ar, Ai, Xr, Xi, lvl, conj=(mode == "H"),
+                block_n=bn, block_s=bs, interpret=itp)
+        else:
+            Y_re, Y_im = _sbgemv.sbgemm_th_complex(Ar, Ai, Xr, Xi,
+                                                   conj=(mode == "H"),
+                                                   block_n=bn, block_s=bs,
+                                                   interpret=itp)
         Y_re, Y_im = Y_re[:, :n0, :S], Y_im[:, :n0, :S]
     return Y_re.astype(out_dtype), Y_im.astype(out_dtype)
 
 
 def sbgemm_gram(A_re, A_im, *, space: str = "parameter", out_dtype=None,
-                backend=None, dispatch=None, block_n: int | None = None):
+                backend=None, dispatch=None, block_n: int | None = None,
+                tile_map=None):
     """Per-bin Hermitian Gram blocks: G[k] = A[k]^H A[k] ("parameter") or
     A[k] A[k]^H ("data") on split planes, with the same dispatch logic as
     the GEMV/GEMM paths.
@@ -254,27 +344,48 @@ def sbgemm_gram(A_re, A_im, *, space: str = "parameter", out_dtype=None,
     zero diagonal): roundoff asymmetry from the accumulation order is
     symmetrized away, so downstream Gram pipelines can rely on G == G^H.
     Setup-phase code (paper Phase 0) — run once per operator, not per apply.
+
+    ``tile_map`` quantizes A once on its (B, n) operand grid — *before*
+    any data-space transpose — so both chained passes read the same
+    quantized operand (the oracle's rule).
     """
     B, m, n = A_re.shape
     out_dtype = out_dtype or A_re.dtype
+    spec, table = resolve_backend_dispatch(backend, dispatch)
+    _check_tile_support(spec, tile_map)
     if space == "data":
         # A A^H == (A^H)^H (A^H): reuse the parameter kernel on the
-        # conjugate-transposed planes.
+        # conjugate-transposed planes.  Tile quantization happens first,
+        # on the original operand grid (it commutes with negation).
+        if tile_map is not None:
+            A_re, A_im = _quantize_planes_elementwise(tile_map, A_re, A_im)
+            tile_map = None
         A_re = A_re.transpose(0, 2, 1)
         A_im = -A_im.transpose(0, 2, 1)
         m, n = n, m
     elif space != "parameter":
         raise ValueError(f"bad gram space {space!r}")
-    spec, table = resolve_backend_dispatch(backend, dispatch)
     path = table.gemv_path(m, n, "H", A_re.dtype, spec)
     if path != "pallas":
+        if tile_map is not None:
+            A_re, A_im = _quantize_planes_elementwise(tile_map, A_re, A_im)
         G_re, G_im = _ref.sbgemm_gram_ref(A_re, A_im, "parameter")
     else:
         bn = min(block_n or spec.default_block_n, max(spec.lane, n))
+        lvl = None
+        if tile_map is not None:
+            lvl = _tile_lvl_per_block(tile_map, B, n, bn)
+            if lvl is None:
+                A_re, A_im = _quantize_planes_elementwise(tile_map,
+                                                          A_re, A_im)
         (Ar, Ai), _ = pad_planes((A_re, A_im), 1, spec.sublane)
         (Ar, Ai), _ = pad_planes((Ar, Ai), 2, bn)
-        G_re, G_im = _sbgemv.sbgemm_gram_complex(
-            Ar, Ai, block_n=bn, interpret=spec.pallas_interpret)
+        if lvl is not None:
+            G_re, G_im = _sbgemv.sbgemm_gram_tiled(
+                Ar, Ai, lvl, block_n=bn, interpret=spec.pallas_interpret)
+        else:
+            G_re, G_im = _sbgemv.sbgemm_gram_complex(
+                Ar, Ai, block_n=bn, interpret=spec.pallas_interpret)
         G_re, G_im = G_re[:, :n, :n], G_im[:, :n, :n]
     # enforce exact Hermitian symmetry (kills accumulation-order roundoff)
     G_re = 0.5 * (G_re + G_re.transpose(0, 2, 1))
@@ -284,29 +395,48 @@ def sbgemm_gram(A_re, A_im, *, space: str = "parameter", out_dtype=None,
 
 def sbgemm_real(A, X, mode: str = "N", *, out_dtype=None,
                 backend=None, dispatch=None, block_n: int | None = None,
-                block_s: int | None = None):
+                block_s: int | None = None, tile_map=None):
     """Real strided-batched GEMM with the same dispatch logic."""
     B, m, n = A.shape
     S = X.shape[2]
     out_dtype = out_dtype or A.dtype
     spec, table = resolve_backend_dispatch(backend, dispatch)
+    _check_tile_support(spec, tile_map)
     path = table.gemv_path(m, n, mode, A.dtype, spec)
     if path != "pallas":
+        if tile_map is not None:
+            return _ref.sbgemm_tiled_real_ref(A, X, tile_map,
+                                              mode).astype(out_dtype)
         return _ref.sbgemm_real_ref(A, X, mode).astype(out_dtype)
 
     bn = min(block_n or spec.default_block_n, max(spec.lane, n))
     bs = min(block_s or spec.default_block_s, round_up(S, spec.sublane))
     itp = spec.pallas_interpret
+    lvl = None
+    if tile_map is not None:
+        lvl = _tile_lvl_per_block(tile_map, B, n, bn)
+        if lvl is None:
+            (A,) = _quantize_planes_elementwise(tile_map, A)
     A2, _ = pad_to_multiple(A, 1, spec.sublane)
     A2, n0 = pad_to_multiple(A2, 2, bn)
     if mode == "N":
         X2, _ = pad_to_multiple(X, 1, bn)
         X2, _ = pad_to_multiple(X2, 2, bs)
-        Y = _sbgemv.sbgemm_n_real(A2, X2, block_n=bn, block_s=bs,
-                                  interpret=itp)[:, :m, :S]
+        if lvl is not None:
+            Y = _sbgemv.sbgemm_n_real_tiled(A2, X2, lvl, block_n=bn,
+                                            block_s=bs, interpret=itp)
+        else:
+            Y = _sbgemv.sbgemm_n_real(A2, X2, block_n=bn, block_s=bs,
+                                      interpret=itp)
+        Y = Y[:, :m, :S]
     else:
         X2, _ = pad_to_multiple(X, 1, spec.sublane)
         X2, _ = pad_to_multiple(X2, 2, bs)
-        Y = _sbgemv.sbgemm_th_real(A2, X2, block_n=bn, block_s=bs,
-                                   interpret=itp)[:, :n0, :S]
+        if lvl is not None:
+            Y = _sbgemv.sbgemm_th_real_tiled(A2, X2, lvl, block_n=bn,
+                                             block_s=bs, interpret=itp)
+        else:
+            Y = _sbgemv.sbgemm_th_real(A2, X2, block_n=bn, block_s=bs,
+                                       interpret=itp)
+        Y = Y[:, :n0, :S]
     return Y.astype(out_dtype)

@@ -7,6 +7,9 @@ mode on CPU, sweeping shapes and dtypes in tests/test_kernels_*).
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
+
+_TILE_LEVEL_INDEX = {"h": 0, "s": 1, "d": 2}
 
 
 def sbgemv_real_ref(A, x, mode: str = "N"):
@@ -127,3 +130,75 @@ def sbgemm_complex_ref(A_re, A_im, X_re, X_im, mode: str = "N"):
         Y_re = e(Ar, Xr) - e(Ai, Xi)
         Y_im = e(Ar, Xi) + e(Ai, Xr)
     return Y_re.astype(A_re.dtype), Y_im.astype(A_re.dtype)
+
+
+# -- tile-centric mixed precision (DESIGN.md §8) ----------------------------
+#
+# Ground-truth semantics: a tile map's (R, C) grid partitions the operand's
+# batch axis B and minor (column) axis n *element-wise* — element (b, :, c)
+# belongs to tile (b*R // B, c*C // n).  Each element of A is round-tripped
+# through its tile's storage dtype; X and the accumulator stay in the
+# carrier dtype.  Kernel lowerings (Pallas in-kernel select, XLA
+# pre-quantize) must match these oracles bit-exactly.
+
+def expand_tile_levels(tile_map, B: int, n: int):
+    """Expand a tile-level grid to per-element ladder indices.
+
+    ``tile_map`` is a TileMap or a tuple-of-tuples of level chars (the
+    *effective* levels, ``min(cell, gemv)``).  Returns a numpy int32
+    (B, n) array of ladder indices (h=0, s=1, d=2) — element (b, c) gets
+    tile ``(b*R // B, c*C // n)``.
+    """
+    levels = getattr(tile_map, "levels", tile_map)
+    R, C = len(levels), len(levels[0])
+    grid = np.array([[_TILE_LEVEL_INDEX[l] for l in row] for row in levels],
+                    dtype=np.int32)
+    rows = (np.arange(B) * R) // B
+    cols = (np.arange(n) * C) // n
+    return grid[rows[:, None], cols[None, :]]
+
+
+def quantize_tile_planes(lvl_idx, *planes):
+    """Round-trip each element of the (B, m, n) A planes through its
+    tile's storage dtype, returning carrier-dtype planes.
+
+    ``lvl_idx`` is the (B, n) per-element index array from
+    :func:`expand_tile_levels`; it broadcasts over the row axis m.  A
+    round-trip through a dtype at or above the carrier is the identity
+    (the ladder's mantissas nest: bf16 ⊂ f32 ⊂ f64), so only genuinely
+    lower tiles lose bits.
+    """
+    sel = jnp.asarray(lvl_idx)[:, None, :]
+    outs = []
+    for A in planes:
+        q_h = A.astype(jnp.bfloat16).astype(A.dtype)
+        q_s = A.astype(jnp.float32).astype(A.dtype)
+        outs.append(jnp.where(sel == 0, q_h, jnp.where(sel == 1, q_s, A)))
+    return outs[0] if len(outs) == 1 else tuple(outs)
+
+
+def sbgemm_tiled_ref(A_re, A_im, X_re, X_im, tile_map, mode: str = "N"):
+    """Tile-quantized complex GEMM oracle: quantize A per tile, contract
+    exactly like :func:`sbgemm_complex_ref` (carrier accumulation)."""
+    B, _, n = A_re.shape
+    idx = expand_tile_levels(tile_map, B, n)
+    Ar, Ai = quantize_tile_planes(idx, A_re, A_im)
+    return sbgemm_complex_ref(Ar, Ai, X_re, X_im, mode)
+
+
+def sbgemm_tiled_real_ref(A, X, tile_map, mode: str = "N"):
+    """Tile-quantized real GEMM oracle (see :func:`sbgemm_tiled_ref`)."""
+    B, _, n = A.shape
+    idx = expand_tile_levels(tile_map, B, n)
+    Aq = quantize_tile_planes(idx, A)
+    return sbgemm_real_ref(Aq, X, mode)
+
+
+def sbgemm_gram_tiled_ref(A_re, A_im, tile_map, space: str = "parameter"):
+    """Tile-quantized Gram oracle: both chained passes read the same
+    quantized A (quantization happens once, on the (B, n) operand grid,
+    *before* any data-space transpose)."""
+    B, _, n = A_re.shape
+    idx = expand_tile_levels(tile_map, B, n)
+    Ar, Ai = quantize_tile_planes(idx, A_re, A_im)
+    return sbgemm_gram_ref(Ar, Ai, space)

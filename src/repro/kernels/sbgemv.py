@@ -419,3 +419,225 @@ def sbgemm_n_real(A, X, *, block_n: int = 512, block_s: int = 128,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(A, X)
+
+
+# ===========================================================================
+# Tile-centric mixed precision (DESIGN.md §8).
+#
+# Tiled variants take an extra int32 ``lvl`` array of shape (B, n_tiles) —
+# one ladder index (h=0, s=1, d=2) per (batch row, column kernel-tile),
+# derived from per-block norms of F_hat (tune/tile_map.py).  Each kernel
+# step reads its tile's scalar level from a (1, 1) block and round-trips
+# the resident A tile through that storage dtype *in VMEM* before the MXU
+# contraction; X and the accumulator stay in the carrier dtype, so the MXU
+# datapath and output tiling are identical to the untiled kernels — only
+# the operand mantissas shrink.  The quantization is a branch-free
+# where-select over the (at most two) lossy round-trips, matching the
+# kernels/ref.py element-wise oracle bit-exactly whenever the kernel tile
+# grid aligns with the tile-map cells (the ops layer checks alignment and
+# falls back to element-wise pre-quantization otherwise).
+# ===========================================================================
+
+
+def _tile_quantize(lvl, *planes):
+    """Round-trip carrier-dtype planes through the storage dtype selected
+    by the scalar ladder index ``lvl`` (h=0, s=1, d=2).  Round-trips at or
+    above the carrier are the identity (nested mantissas), so the d-branch
+    passes through untouched."""
+    outs = []
+    for A in planes:
+        q_h = A.astype(jnp.bfloat16).astype(A.dtype)
+        q_s = A.astype(jnp.float32).astype(A.dtype)
+        outs.append(jnp.where(lvl == 0, q_h, jnp.where(lvl == 1, q_s, A)))
+    return outs
+
+
+def _sbgemm_th_complex_tiled_kernel(conj: bool, lvl_ref, Ar_ref, Ai_ref,
+                                    Xr_ref, Xi_ref, Yr_ref, Yi_ref):
+    lvl = lvl_ref[0, 0]
+    Ar, Ai = _tile_quantize(lvl, Ar_ref[0], Ai_ref[0])
+    Xr = Xr_ref[0]                      # (m, bs) — carrier, never quantized
+    Xi = Xi_ref[0]
+    rr = _dg_t(Ar, Xr)                  # (bn, bs)
+    ii = _dg_t(Ai, Xi)
+    ri = _dg_t(Ai, Xr)
+    ir = _dg_t(Ar, Xi)
+    if conj:
+        Yr_ref[0] = rr + ii
+        Yi_ref[0] = ir - ri
+    else:
+        Yr_ref[0] = rr - ii
+        Yi_ref[0] = ir + ri
+
+
+def sbgemm_th_complex_tiled(A_re, A_im, X_re, X_im, lvl, *, conj: bool,
+                            block_n: int = 512, block_s: int = 128,
+                            interpret: bool = False):
+    """Tile-quantized (conjugate-)transpose batched complex GEMM.  ``lvl``
+    int32 (B, n // block_n).  Shapes as :func:`sbgemm_th_complex`."""
+    B, m, n = A_re.shape
+    S = X_re.shape[2]
+    assert n % block_n == 0 and S % block_s == 0 and X_re.shape == (B, m, S)
+    assert lvl.shape == (B, n // block_n)
+    grid = (B, n // block_n, S // block_s)
+    spec_lvl = pl.BlockSpec((1, 1), lambda b, j, s: (b, j))
+    spec_A = pl.BlockSpec((1, m, block_n), lambda b, j, s: (b, 0, j))
+    spec_X = pl.BlockSpec((1, m, block_s), lambda b, j, s: (b, 0, s))
+    spec_Y = pl.BlockSpec((1, block_n, block_s), lambda b, j, s: (b, j, s))
+    out = jax.ShapeDtypeStruct((B, n, S), _ACC)
+    return pl.pallas_call(
+        functools.partial(_sbgemm_th_complex_tiled_kernel, conj),
+        grid=grid,
+        in_specs=[spec_lvl, spec_A, spec_A, spec_X, spec_X],
+        out_specs=[spec_Y, spec_Y],
+        out_shape=[out, out],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(lvl, A_re, A_im, X_re, X_im)
+
+
+def _sbgemm_n_complex_tiled_kernel(lvl_ref, Ar_ref, Ai_ref, Xr_ref, Xi_ref,
+                                   Yr_ref, Yi_ref):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        Yr_ref[...] = jnp.zeros_like(Yr_ref)
+        Yi_ref[...] = jnp.zeros_like(Yi_ref)
+
+    lvl = lvl_ref[0, 0]
+    Ar, Ai = _tile_quantize(lvl, Ar_ref[0], Ai_ref[0])
+    Xr = Xr_ref[0]                      # (bn, bs)
+    Xi = Xi_ref[0]
+    rr = _dot(Ar, Xr)                   # (m, bs)
+    ii = _dot(Ai, Xi)
+    ri = _dot(Ai, Xr)
+    ir = _dot(Ar, Xi)
+    Yr_ref[0] += rr - ii
+    Yi_ref[0] += ir + ri
+
+
+def sbgemm_n_complex_tiled(A_re, A_im, X_re, X_im, lvl, *,
+                           block_n: int = 512, block_s: int = 128,
+                           interpret: bool = False):
+    """Tile-quantized non-transpose batched complex GEMM.  ``lvl`` int32
+    (B, n // block_n).  Shapes as :func:`sbgemm_n_complex`."""
+    B, m, n = A_re.shape
+    S = X_re.shape[2]
+    assert n % block_n == 0 and S % block_s == 0 and X_re.shape == (B, n, S)
+    assert lvl.shape == (B, n // block_n)
+    grid = (B, S // block_s, n // block_n)
+    spec_lvl = pl.BlockSpec((1, 1), lambda b, s, j: (b, j))
+    spec_A = pl.BlockSpec((1, m, block_n), lambda b, s, j: (b, 0, j))
+    spec_X = pl.BlockSpec((1, block_n, block_s), lambda b, s, j: (b, j, s))
+    spec_Y = pl.BlockSpec((1, m, block_s), lambda b, s, j: (b, 0, s))
+    out = jax.ShapeDtypeStruct((B, m, S), _ACC)
+    return pl.pallas_call(
+        _sbgemm_n_complex_tiled_kernel,
+        grid=grid,
+        in_specs=[spec_lvl, spec_A, spec_A, spec_X, spec_X],
+        out_specs=[spec_Y, spec_Y],
+        out_shape=[out, out],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lvl, A_re, A_im, X_re, X_im)
+
+
+def _sbgemm_gram_tiled_kernel(lvli_ref, lvlj_ref, Ari_ref, Arj_ref,
+                              Aii_ref, Aij_ref, Gr_ref, Gi_ref):
+    # The i and j column tiles may sit in different map cells: quantize
+    # each side at its own level, exactly as the oracle quantizes A once
+    # and then forms A^H A.
+    Ari, Aii = _tile_quantize(lvli_ref[0, 0], Ari_ref[0], Aii_ref[0])
+    Arj, Aij = _tile_quantize(lvlj_ref[0, 0], Arj_ref[0], Aij_ref[0])
+    Gr_ref[0] = _dg_t(Ari, Arj) + _dg_t(Aii, Aij)
+    Gi_ref[0] = _dg_t(Ari, Aij) - _dg_t(Aii, Arj)
+
+
+def sbgemm_gram_tiled(A_re, A_im, lvl, *, block_n: int = 512,
+                      interpret: bool = False):
+    """Tile-quantized per-batch Gram blocks G = A^H A.  ``lvl`` int32
+    (B, n // block_n); both passes read the same quantized operand."""
+    B, m, n = A_re.shape
+    assert n % block_n == 0
+    assert lvl.shape == (B, n // block_n)
+    grid = (B, n // block_n, n // block_n)
+    spec_li = pl.BlockSpec((1, 1), lambda b, i, j: (b, i))
+    spec_lj = pl.BlockSpec((1, 1), lambda b, i, j: (b, j))
+    spec_i = pl.BlockSpec((1, m, block_n), lambda b, i, j: (b, 0, i))
+    spec_j = pl.BlockSpec((1, m, block_n), lambda b, i, j: (b, 0, j))
+    spec_G = pl.BlockSpec((1, block_n, block_n), lambda b, i, j: (b, i, j))
+    out = jax.ShapeDtypeStruct((B, n, n), _ACC)
+    return pl.pallas_call(
+        _sbgemm_gram_tiled_kernel,
+        grid=grid,
+        in_specs=[spec_li, spec_lj, spec_i, spec_j, spec_i, spec_j],
+        out_specs=[spec_G, spec_G],
+        out_shape=[out, out],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(lvl, lvl, A_re, A_re, A_im, A_im)
+
+
+def _sbgemm_th_real_tiled_kernel(lvl_ref, A_ref, X_ref, Y_ref):
+    (A,) = _tile_quantize(lvl_ref[0, 0], A_ref[0])
+    Y_ref[0] = _dg_t(A, X_ref[0])
+
+
+def sbgemm_th_real_tiled(A, X, lvl, *, block_n: int = 512,
+                         block_s: int = 128, interpret: bool = False):
+    """Tile-quantized Y = A^T X, real.  ``lvl`` int32 (B, n // block_n)."""
+    B, m, n = A.shape
+    S = X.shape[2]
+    assert n % block_n == 0 and S % block_s == 0 and X.shape == (B, m, S)
+    assert lvl.shape == (B, n // block_n)
+    grid = (B, n // block_n, S // block_s)
+    return pl.pallas_call(
+        _sbgemm_th_real_tiled_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda b, j, s: (b, j)),
+                  pl.BlockSpec((1, m, block_n), lambda b, j, s: (b, 0, j)),
+                  pl.BlockSpec((1, m, block_s), lambda b, j, s: (b, 0, s))],
+        out_specs=pl.BlockSpec((1, block_n, block_s),
+                               lambda b, j, s: (b, j, s)),
+        out_shape=jax.ShapeDtypeStruct((B, n, S), _ACC),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(lvl, A, X)
+
+
+def _sbgemm_n_real_tiled_kernel(lvl_ref, A_ref, X_ref, Y_ref):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        Y_ref[...] = jnp.zeros_like(Y_ref)
+
+    (A,) = _tile_quantize(lvl_ref[0, 0], A_ref[0])
+    Y_ref[0] += _dot(A, X_ref[0])
+
+
+def sbgemm_n_real_tiled(A, X, lvl, *, block_n: int = 512,
+                        block_s: int = 128, interpret: bool = False):
+    """Tile-quantized Y = A X, real.  ``lvl`` int32 (B, n // block_n)."""
+    B, m, n = A.shape
+    S = X.shape[2]
+    assert n % block_n == 0 and S % block_s == 0 and X.shape == (B, n, S)
+    assert lvl.shape == (B, n // block_n)
+    grid = (B, S // block_s, n // block_n)
+    return pl.pallas_call(
+        _sbgemm_n_real_tiled_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda b, s, j: (b, j)),
+                  pl.BlockSpec((1, m, block_n), lambda b, s, j: (b, 0, j)),
+                  pl.BlockSpec((1, block_n, block_s), lambda b, s, j: (b, j, s))],
+        out_specs=pl.BlockSpec((1, m, block_s), lambda b, s, j: (b, 0, s)),
+        out_shape=jax.ShapeDtypeStruct((B, m, S), _ACC),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lvl, A, X)

@@ -24,8 +24,8 @@ from .result import SolveResult
 _SAFE = lambda x: jnp.where(x == 0, 1, x)
 
 
-def lsqr(op, d_obs, *, damp: float = 0.0, tol: float = 1e-10,
-         maxiter: int = 500,
+def lsqr(op, d_obs, *, damp: float = 0.0, tol=1e-10,
+         maxiter: int = 500, col_maxiter=None,
          precision: SolverPrecision | str = SolverPrecision()) -> SolveResult:
     """Damped LSQR for ``op`` exposing ``matmat``/``rmatmat``.
 
@@ -34,10 +34,25 @@ def lsqr(op, d_obs, *, damp: float = 0.0, tol: float = 1e-10,
     estimate ||r_k|| / ||d|| per column (phibar recurrence), which tracks
     the true residual of the damped system.  ``precision`` accepts a
     3-char string or ``"auto"`` (derived from ``tol``), like :func:`pcg`.
+
+    ``tol`` and ``col_maxiter`` may be per-column (S,) vectors, with the
+    same freeze contract as :func:`pcg`: a column whose residual estimate
+    drops below its tolerance (or whose iteration budget runs out) has
+    its rotation output ``phi`` masked to zero from then on — its x
+    column stops moving and its recorded residual is constant — while the
+    shared bidiagonalization keeps serving the still-active batch-mates.
+    ``SolveResult.col_iters`` records where each column froze, and
+    ``maxiter=0`` reports the initial residual instead of an empty
+    history.
     """
-    precision = resolve_precision(precision, tol)
+    precision = resolve_precision(precision, float(np.min(tol)))
     squeeze = d_obs.ndim == 2
     b = d_obs[..., None] if squeeze else d_obs
+    S = b.shape[-1]
+    tol_col = np.broadcast_to(np.asarray(tol, np.float64), (S,))
+    budget = (np.full((S,), maxiter, dtype=int) if col_maxiter is None
+              else np.minimum(np.broadcast_to(
+                  np.asarray(col_maxiter, dtype=int), (S,)), maxiter))
     rec_dt = precision.recurrence_dtype()
     app_dt = precision.apply_dtype()
     ortho = precision.orthogonalize
@@ -57,11 +72,25 @@ def lsqr(op, d_obs, *, damp: float = 0.0, tol: float = 1e-10,
     b_norm = np.asarray(beta, np.float64)
     b_norm = np.where(b_norm == 0, 1.0, b_norm)
 
+    # x0 = 0, so the initial residual estimate is |phibar| / ||b|| (1.0
+    # for any nonzero column) — the same honest starting point pcg reports
+    relres = np.abs(np.asarray(phibar, np.float64)) / b_norm
+    conv = relres < tol_col              # converged columns (stay frozen)
+    frozen = conv | (budget <= 0)        # frozen = converged or out of budget
+    col_iters = np.zeros((S,), dtype=int)
     history = []
-    converged = False
     k = 0
+    if frozen.all() or maxiter == 0:
+        # no iterations will run: report the initial residual instead of
+        # the old empty-history contract (mirrors pcg's maxiter=0 guard)
+        history.append(relres)
     for k in range(1, maxiter + 1):
-        # continue the bidiagonalization
+        if frozen.all():
+            k -= 1
+            break
+        active = jnp.asarray(~frozen)
+        # continue the bidiagonalization (shared across the batch; frozen
+        # columns keep riding along but their x is masked below)
         u = A(v) - u * alpha.astype(rec_dt)
         beta = col_norm(u, ortho)
         u = (u / _SAFE(beta)).astype(rec_dt)
@@ -82,17 +111,27 @@ def lsqr(op, d_obs, *, damp: float = 0.0, tol: float = 1e-10,
         phi = c * phibar
         phibar = s * phibar
 
+        # frozen columns: zero phi so their x stops moving (the freeze
+        # masking — the LSQR analogue of pcg's zeroed alpha/beta)
+        phi = jnp.where(active, phi, 0)
         x = (x + w * (phi / _SAFE(rho)).astype(rec_dt)).astype(rec_dt)
         w = (v - w * (theta / _SAFE(rho)).astype(rec_dt)).astype(rec_dt)
 
         # the rotations only define phibar up to sign (the damping rotation
-        # can flip it, as in SciPy's recurrence); |phibar| estimates ||r||
-        relres = np.abs(np.asarray(phibar, np.float64)) / b_norm
+        # can flip it, as in SciPy's recurrence); |phibar| estimates ||r||.
+        # Frozen columns report the residual they froze at: their phibar
+        # keeps evolving with the shared recurrence, but recompute noise
+        # must never un-freeze them (same contract as pcg).
+        relres_new = np.abs(np.asarray(phibar, np.float64)) / b_norm
+        relres = np.where(frozen, relres, relres_new)
         history.append(relres)
-        if bool(relres.max() < tol):
-            converged = True
+        col_iters[~frozen] = k
+        conv |= (~frozen) & (relres < tol_col)
+        frozen = frozen | conv | (budget <= k)
+        if frozen.all():
             break
 
     x = x[..., 0] if squeeze else x
-    return SolveResult(x=x, converged=converged, n_iters=k,
-                       residual_history=np.asarray(history))
+    return SolveResult(x=x, converged=bool(conv.all()), n_iters=k,
+                       residual_history=np.asarray(history),
+                       col_iters=col_iters)

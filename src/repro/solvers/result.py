@@ -23,9 +23,10 @@ class SolveResult:
     multi-RHS solves, no trailing axis for a single vector.
     ``residual_history`` is (n_iters, S) — entry [k, s] is column s's
     relative residual after iteration k (estimated for LSQR).
-    ``col_iters`` (solvers with per-column freezing, i.e. ``pcg``) is the
-    number of iterations each column actually updated before it froze —
-    the per-request iteration count the serving engine demuxes.
+    ``col_iters`` (solvers with per-column freezing: ``pcg``,
+    ``cg_normal_equations``, ``lsqr``) is the number of iterations each
+    column actually updated before it froze — the per-request iteration
+    count the serving engine demuxes.
     """
 
     x: jax.Array

@@ -14,6 +14,8 @@ Pieces (each usable standalone):
                 throughput/latency modes, measurement accounting
     cache     — TuningCache: JSON persistence keyed by (shape, ladder,
                 variant, device kind); corrupt/stale entries re-tune
+    tile_map  — block-norm analysis of F_hat -> per-tile precision maps
+                (the tile-aware eq.-(6) extension, DESIGN.md §8)
     autotune  — the orchestrator; TuneResult carries records/front/bounds
 """
 
@@ -22,3 +24,5 @@ from .cache import CacheKey, TuningCache, default_cache_path  # noqa: F401
 from .harness import TimingHarness  # noqa: F401
 from .pruner import (PruneReport, calibrate_constants,  # noqa: F401
                      minimal_elements, probe_configs, prune_lattice)
+from .tile_map import (block_norms, derive_tile_map,  # noqa: F401
+                       tile_map_for_operator, tile_weights)

@@ -41,6 +41,7 @@ from repro.core.toeplitz import random_unrepresentable
 from .cache import CacheKey, TuningCache
 from .harness import TimingHarness
 from .pruner import calibrate_constants, probe_configs, prune_lattice
+from .tile_map import tile_map_for_operator
 
 _ADJOINT_VARIANTS = ("rmatvec", "rmatmat")
 
@@ -93,7 +94,8 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
              cache_path=None, slack: float = 8.0, kappa: float = 1.0,
              constants: dict | None = None, p_r: int | None = None,
              p_c: int | None = None, n_rhs: int = 4,
-             seed: int = 0) -> TuneResult:
+             seed: int = 0,
+             tiles: bool | tuple[int, int] | None = None) -> TuneResult:
     """Pick the fastest precision config of ``op`` meeting ``tol``.
 
     ``op`` should be the *highest-precision* operator (its stored Fourier
@@ -108,6 +110,15 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
     only trades pruning aggressiveness, never correctness of the final
     config.  Pass ``constants`` to skip probe calibration and prune with
     the given eq.-(6) constants directly.
+
+    ``tiles`` enables tile-centric refinement (DESIGN.md §8): after the
+    uniform frontier search, each frontier config gets a per-tile
+    precision map derived from F_hat's block norms (``True`` = a 2x2
+    grid, or pass an explicit ``(R_tiles, C_tiles)``), and the mixed-tile
+    candidates whose *measured* error still meets ``tol`` join the timed
+    set — on a backend whose :class:`repro.backend.BackendSpec` gates
+    tile precision off, refinement is skipped (the uniform search is
+    unchanged).  Tile-enabled tunes cache under a ``;tiles=RxC`` key.
 
     Persistence is opt-in: pass ``cache`` (a :class:`TuningCache`) or
     ``cache_path``; hits answer any tolerance from stored measurements.
@@ -135,6 +146,10 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
     lattice = list(all_configs(ladder))
     top = max_level(ladder)
     base_cfg = PrecisionConfig(*([top] * 5))
+    tile_shape = (2, 2) if tiles is True else (tuple(tiles) if tiles else None)
+    if tile_shape is not None and \
+            not op.opts.resolve().spec.tile_precision:
+        tile_shape = None          # backend gates tile precision off
 
     if cache is None and cache_path is not None:
         cache = TuningCache(cache_path)
@@ -156,7 +171,7 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
         key = CacheKey.for_operator(op, ladder, variant, mode=key_mode,
                                     n_rhs=n_rhs_eff, input_tag=input_tag,
                                     synthetic_timer=synthetic,
-                                    comm_level=comm_level)
+                                    comm_level=comm_level, tiles=tile_shape)
     if cache is not None:
         cached = cache.lookup_config(key, tol)
         if cached is not None:
@@ -216,6 +231,33 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
             continue
         if error_of(cfg) <= tol:
             frontier.append(cfg)
+
+    # 4b. tile refinement: derive a block-norm tile map per frontier
+    #     config (eq.-(6) tile-aware budget, calibrated constants); a
+    #     mixed-tile candidate joins the timed set only if its *measured*
+    #     error still meets tol.  derive returns None when the pruner's
+    #     budget math provably rejects a map (no cell can drop) — then
+    #     the uniform frontier stands.
+    if tile_shape is not None:
+        from repro.core.error_model import relative_error_bound
+        tiled: list[PrecisionConfig] = []
+        for cfg in frontier:
+            tm, t_w = tile_map_for_operator(
+                op, cfg, tol, shape=tile_shape, p_r=p_r, p_c=p_c,
+                adjoint=adjoint, kappa=kappa, input_level=top,
+                constants=constants, variant=model_variant,
+                comm_level=comm_level)
+            if tm is None:
+                continue
+            tcfg = cfg.replace(tiles=tm)
+            report.bounds[tcfg.to_string()] = relative_error_bound(
+                tcfg, op.N_t, op.N_d, op.N_m, p_r=p_r, p_c=p_c,
+                adjoint=adjoint, variant=model_variant, kappa=kappa,
+                input_level=top, constants=constants,
+                comm_level=comm_level, tile_weights=t_w)
+            if error_of(tcfg) <= tol:
+                tiled.append(tcfg)
+        frontier += tiled
 
     # 5. time baseline + frontier only; select exactly as optimal_config
     #    would over the exhaustive sweep.

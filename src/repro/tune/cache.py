@@ -39,7 +39,13 @@ CACHE_ENV = "REPRO_TUNE_CACHE"
 # also stores calibrated dispatch tables per backend.  v1/v2 entries were
 # measured through lowerings the backend layer may no longer pick for the
 # same kwargs — they read as misses and are re-tuned.
-SCHEMA_VERSION = 3
+# v4: the precision-config codec gained the ``;tiles=`` tile-map suffix
+# (tile-centric mixed precision, DESIGN.md §8) and tile-enabled tunes key
+# on their tile grid (``;tiles=RxC`` in detail).  v3 entries parse but
+# were measured without the tiled kernel paths the tuner may now select —
+# they read as misses and are re-tuned (migration: the stale entry is
+# dropped at the next merge-on-write save).
+SCHEMA_VERSION = 4
 
 
 def default_cache_path() -> pathlib.Path:
@@ -79,7 +85,8 @@ class CacheKey:
                      mode: str = "throughput",
                      n_rhs: int | None = None, input_tag: str = "",
                      synthetic_timer: bool = False,
-                     comm_level: str | None = None) -> "CacheKey":
+                     comm_level: str | None = None,
+                     tiles: tuple | None = None) -> "CacheKey":
         if device is None:
             device = jax.devices()[0]
         kind = f"{device.platform}:{getattr(device, 'device_kind', '')}"
@@ -88,6 +95,11 @@ class CacheKey:
                   f"bs={r.block_s};mode={mode}")
         if variant in ("matmat", "rmatmat"):
             detail += f";S={n_rhs}"
+        if tiles is not None:
+            # tile-enabled tunes explore a larger config space; their
+            # selections must never answer (or be answered by) a
+            # phase-uniform tune of the same shape
+            detail += f";tiles={tiles[0]}x{tiles[1]}"
         if comm_level is not None:
             # the reduced-precision-communication knob changes both the
             # measured numbers and their error reference

@@ -114,7 +114,8 @@ def prune_lattice(configs: Iterable[PrecisionConfig], tol: float, N_t: int,
                   kappa: float = 1.0, input_level: str = "d",
                   constants: Mapping[str, float] | None = None,
                   slack: float = 1.0,
-                  comm_level: str | None = None) -> PruneReport:
+                  comm_level: str | None = None,
+                  tile_weights=None) -> PruneReport:
     """Prune a config lattice with eq. (6) alone (no measurements).
 
     A config survives to the *frontier* iff its bound is within
@@ -122,7 +123,9 @@ def prune_lattice(configs: Iterable[PrecisionConfig], tol: float, N_t: int,
     within the cutoff.  The all-highest config is always kept feasible —
     it is the measurement baseline and the fallback selection.
     ``comm_level`` prices the reduced-precision-communication knob into
-    every bound (see ``core.error_model.relative_error_bound``)."""
+    every bound (see ``core.error_model.relative_error_bound``);
+    ``tile_weights`` the per-tile block-norm fractions for any tile-mapped
+    configs in the lattice (the tile-aware gemv term)."""
     if tol <= 0.0:
         raise ValueError(f"tolerance must be positive, got {tol}")
     configs = list(configs)
@@ -131,6 +134,7 @@ def prune_lattice(configs: Iterable[PrecisionConfig], tol: float, N_t: int,
     bounds = lattice_bounds(configs, N_t, N_d, N_m, p_r=p_r, p_c=p_c,
                             adjoint=adjoint, variant=variant, kappa=kappa,
                             input_level=input_level, comm_level=comm_level,
+                            tile_weights=tile_weights,
                             constants=dict(constants) if constants else None)
     cutoff = slack * tol
     best = min(configs, key=lambda cfg: (bounds[cfg.to_string()],

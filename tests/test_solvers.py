@@ -151,6 +151,85 @@ def test_cgnr_per_column_tol_and_budget():
     assert final[0] < 1e-4 and final[1] < 1e-10
 
 
+def test_cgnr_col_maxiter_budget_freezes_column():
+    """The pcg budget contract must survive the cg_normal_equations
+    wrapper: a column out of budget freezes (constant recorded residual)
+    while its batch-mate iterates to convergence."""
+    op = _toeplitz_op()
+    M_true = jax.random.normal(jax.random.PRNGKey(18), (op.N_m, op.N_t, 2),
+                               jnp.float64)
+    D = op.matmat(M_true)
+    res = solvers.cg_normal_equations(op, D, tol=1e-12, maxiter=500,
+                                      col_maxiter=[2, 500])
+    assert int(res.col_iters[0]) == 2
+    assert not res.converged
+    h = res.residual_history
+    np.testing.assert_array_equal(h[2:, 0], np.full(len(h) - 2, h[1, 0]))
+    assert h[-1, 1] < 1e-12
+
+
+def test_cgnr_maxiter0_reports_initial_residual():
+    """maxiter=0 through the normal-equations wrapper: one history row
+    with the initial relative residual of the normal system (x0 = 0, so
+    exactly 1), not an empty history."""
+    op = _toeplitz_op()
+    D = jax.random.normal(jax.random.PRNGKey(19), (op.N_d, op.N_t, 2),
+                          jnp.float64)
+    res = solvers.cg_normal_equations(op, D, tol=1e-10, maxiter=0)
+    assert res.n_iters == 0 and not res.converged
+    assert res.residual_history.shape == (1, 2)
+    np.testing.assert_allclose(res.final_relres, 1.0)
+
+
+def test_lsqr_per_column_tolerances():
+    op = _toeplitz_op()
+    M_true = jax.random.normal(jax.random.PRNGKey(20), (op.N_m, op.N_t, 2),
+                               jnp.float64)
+    D = op.matmat(M_true)
+    res = solvers.lsqr(op, D, tol=[1e-3, 1e-12], maxiter=500)
+    assert res.converged
+    assert res.col_iters is not None
+    assert int(res.col_iters[0]) < int(res.col_iters[1])
+    final = res.residual_history[-1]
+    assert final[0] < 1e-3 and final[1] < 1e-12
+    # the loose column's recorded residual is constant from its freeze on
+    k0 = int(res.col_iters[0])
+    h = res.residual_history
+    np.testing.assert_array_equal(h[k0 - 1:, 0],
+                                  np.full(len(h) - k0 + 1, h[k0 - 1, 0]))
+
+
+def test_lsqr_col_maxiter_budget_freezes_column():
+    op = _toeplitz_op()
+    M_true = jax.random.normal(jax.random.PRNGKey(21), (op.N_m, op.N_t, 2),
+                               jnp.float64)
+    D = op.matmat(M_true)
+    res = solvers.lsqr(op, D, tol=1e-13, maxiter=300, col_maxiter=[3, 300])
+    assert int(res.col_iters[0]) == 3
+    assert not res.converged
+    h = res.residual_history
+    np.testing.assert_array_equal(h[3:, 0], np.full(len(h) - 3, h[2, 0]))
+    # and the frozen column's solution stopped moving: re-run with
+    # maxiter=3 and compare exactly
+    res3 = solvers.lsqr(op, D, tol=1e-13, maxiter=3)
+    np.testing.assert_array_equal(np.asarray(res.x[..., 0]),
+                                  np.asarray(res3.x[..., 0]))
+
+
+def test_lsqr_maxiter0_reports_initial_residual():
+    """lsqr's maxiter=0 drift fixed: the (1, S) initial-residual history
+    (phibar starts at ||b||, so relres is exactly 1) instead of the old
+    empty history, plus col_iters on the way out."""
+    op = _toeplitz_op()
+    D = jax.random.normal(jax.random.PRNGKey(22), (op.N_d, op.N_t, 2),
+                          jnp.float64)
+    res = solvers.lsqr(op, D, tol=1e-10, maxiter=0)
+    assert res.n_iters == 0 and not res.converged
+    assert res.residual_history.shape == (1, 2)
+    np.testing.assert_allclose(res.final_relres, 1.0)
+    assert res.col_iters is not None and (res.col_iters == 0).all()
+
+
 # ---------------------------------------------------------------------------
 # CGNR / LSQR on the Toeplitz operator
 # ---------------------------------------------------------------------------

@@ -330,14 +330,15 @@ def test_cache_stale_entry_is_miss(tmp_path):
     assert res2.config == res.config
 
 
-@pytest.mark.parametrize("stale_version", [1, 2])
+@pytest.mark.parametrize("stale_version", [1, 2, 3])
 def test_cache_stale_schema_entry_is_stale_and_migrates(tmp_path,
                                                         stale_version):
-    """Entries from older schemata — v1 (pre-``variant="gram"``) and v2
-    (pre-backend-fingerprint keys) — must read as misses, and a re-tune
-    must overwrite them in place with current-version records."""
+    """Entries from older schemata — v1 (pre-``variant="gram"``), v2
+    (pre-backend-fingerprint keys), and v3 (pre-tile-map codec) — must
+    read as misses, and a re-tune must overwrite them in place with
+    current-version records."""
     from repro.tune.cache import SCHEMA_VERSION
-    assert SCHEMA_VERSION == 3
+    assert SCHEMA_VERSION == 4
     path = tmp_path / "tune.json"
     op, _, m = small_problem()
     res = autotune(op, tol=3e-6, v=m, ladder=("d", "s"), timer=fake_timer,

@@ -16,9 +16,11 @@ from repro.core import optimal_config  # noqa: E402
 from repro.core.error_model import relative_error_bound  # noqa: E402
 from repro.core.pareto import ConfigRecord  # noqa: E402
 from repro.core.precision import (PHASES, PrecisionConfig,  # noqa: E402
-                                  all_configs, config_le, config_lt,
-                                  level_index, max_level)
-from repro.tune import CacheKey, TuningCache, prune_lattice  # noqa: E402
+                                  TileMap, _LEVELS, all_configs, config_le,
+                                  config_lt, level_index, max_level,
+                                  tile_le)
+from repro.tune import (CacheKey, TuningCache, derive_tile_map,  # noqa: E402
+                        prune_lattice, tile_weights)
 
 LADDERS = [("d", "s"), ("s", "h"), ("d", "s", "h")]
 
@@ -26,6 +28,38 @@ configs3 = st.sampled_from([c for c in all_configs(("d", "s", "h"))])
 shapes = st.tuples(st.integers(1, 4096), st.integers(1, 512),
                    st.integers(1, 4096))
 grids = st.tuples(st.integers(1, 64), st.integers(1, 64))
+levels = st.sampled_from(list(_LEVELS))
+
+
+def _draw_weights(draw, R, C):
+    raw = [draw(st.floats(1e-6, 1.0, allow_nan=False, allow_infinity=False))
+           for _ in range(R * C)]
+    total = sum(raw)
+    return tuple(tuple(raw[r * C + c] / total for c in range(C))
+                 for r in range(R))
+
+
+@st.composite
+def dominated_tile_map_pairs(draw):
+    """(a, b, weights) with ``tile_le(a, b)``: b drawn cell-wise
+    at-or-above a, plus a matching normalized weight grid."""
+    R = draw(st.integers(1, 3))
+    C = draw(st.integers(1, 3))
+    a = [[draw(levels) for _ in range(C)] for _ in range(R)]
+    b = [[draw(st.sampled_from(_LEVELS[_LEVELS.index(l):])) for l in row]
+         for row in a]
+    return (TileMap(tuple(tuple(r) for r in a)),
+            TileMap(tuple(tuple(r) for r in b)),
+            _draw_weights(draw, R, C))
+
+
+@st.composite
+def uniform_tile_maps(draw):
+    """(map, weights) with a level-uniform map of any shape."""
+    R = draw(st.integers(1, 3))
+    C = draw(st.integers(1, 3))
+    lvl = draw(levels)
+    return TileMap.uniform(lvl, (R, C)), _draw_weights(draw, R, C)
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +112,82 @@ def test_all_highest_config_minimizes_bound_over_lattice(ladder, shape,
     for cfg in all_configs(ladder):
         assert b_top <= relative_error_bound(cfg, Nt, Nd, Nm,
                                              adjoint=adjoint)
+
+
+# ---------------------------------------------------------------------------
+# Tile-aware bound properties (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(configs3, dominated_tile_map_pairs(), shapes)
+def test_tile_bound_monotone_under_pointwise_domination(cfg, maps, shape):
+    """tile_le(a, b) (a pointwise at-or-below b) implies bound(a) >=
+    bound(b) — lowering any tile never decreases the bound, for any
+    weight distribution."""
+    a, b, w = maps
+    Nt, Nd, Nm = shape
+    assert tile_le(a, b)
+    b_a = relative_error_bound(cfg.replace(tiles=a), Nt, Nd, Nm,
+                               tile_weights=w)
+    b_b = relative_error_bound(cfg.replace(tiles=b), Nt, Nd, Nm,
+                               tile_weights=w)
+    assert b_a >= b_b
+
+
+@settings(max_examples=60, deadline=None)
+@given(configs3, uniform_tile_maps(), shapes)
+def test_uniform_tile_map_reduces_to_phase_level_bound(cfg, tm_w, shape):
+    """A level-uniform map is no map at all: the tile-aware bound equals
+    the phase-level bound of the config with gemv at the effective level
+    min(L, gemv) — for ANY weight distribution (weights sum to 1)."""
+    tm, w = tm_w
+    Nt, Nd, Nm = shape
+    lvl = tm.levels[0][0]
+    eff = lvl if level_index(lvl) < level_index(cfg.gemv) else cfg.gemv
+    tiled = relative_error_bound(cfg.replace(tiles=tm), Nt, Nd, Nm,
+                                 tile_weights=w)
+    phase = relative_error_bound(cfg.replace(gemv=eff, tiles=None),
+                                 Nt, Nd, Nm)
+    assert tiled == pytest.approx(phase, rel=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from([c for c in all_configs(("d", "s", "h"))
+                        if c.tiles is None]),
+       st.tuples(st.integers(1, 3), st.integers(1, 3)),
+       st.lists(st.floats(1e-8, 1.0, allow_nan=False,
+                          allow_infinity=False), min_size=9, max_size=9),
+       st.floats(1e-12, 1e-2, allow_nan=False, allow_infinity=False),
+       st.tuples(st.integers(1, 512), st.integers(1, 64),
+                 st.integers(1, 512)))
+def test_derived_tile_map_respects_tolerance(cfg, grid, raw_w, tol, shape):
+    """Whenever derive_tile_map returns a map, the tile-aware bound of
+    the tiled config is within the requested tolerance, and the map is a
+    strict improvement (some cell below the gemv level)."""
+    R, C = grid
+    Nt, Nd, Nm = shape
+    total = sum(raw_w[:R * C])
+    w = tuple(tuple(raw_w[r * C + c] / total for c in range(C))
+              for r in range(R))
+    tm = derive_tile_map(cfg, tol, Nt, Nd, Nm, shape=grid, weights=w)
+    if tm is None:
+        return
+    assert tm.shape == grid
+    eff = tm.effective(cfg.gemv)
+    assert any(level_index(l) < level_index(cfg.gemv)
+               for row in eff for l in row)
+    assert relative_error_bound(cfg.replace(tiles=tm), Nt, Nd, Nm,
+                                tile_weights=w) <= tol
+
+
+@settings(max_examples=40, deadline=None)
+@given(dominated_tile_map_pairs())
+def test_tile_order_is_a_partial_order(maps):
+    a, b, _ = maps
+    assert tile_le(a, a) and tile_le(b, b)
+    assert tile_le(a, b)
+    if tile_le(b, a):
+        assert a == b
 
 
 # ---------------------------------------------------------------------------
