@@ -1,20 +1,24 @@
 """Guard the committed benchmark-smoke artifacts against regression.
 
 The repo commits the smoke-mode ``BENCH_fig4.json`` / ``BENCH_serve.json``
-artifacts; the CI benchmark-smoke job copies them aside, re-runs the
-benches (which overwrite the files in place), and then calls this checker
-to compare the fresh ratios against the committed baselines:
+/ ``BENCH_hessian.json`` artifacts; the CI benchmark-smoke job copies
+them aside, re-runs the benches (which overwrite the files in place), and
+then calls this checker to compare the fresh ratios against the committed
+baselines:
 
     python -m benchmarks.check_smoke_regression \
         --baseline-fig4 /tmp/BENCH_fig4.json \
-        --baseline-serve /tmp/BENCH_serve.json
+        --baseline-serve /tmp/BENCH_serve.json \
+        --baseline-hessian /tmp/BENCH_hessian.json
 
 A *ratio* here is a speedup-style metric (higher is better); the check
 fails when a fresh ratio falls below ``(1 - tolerance)`` of its committed
-value (default tolerance 20%, per-key, only keys present in both files —
-so adding a new sweep point never breaks the gate).  Raw wall times are
-deliberately NOT compared: CI runners are too noisy for absolute times,
-but the ratios divide that noise out.
+value (default tolerance 20%, per-key).  A baseline key MISSING from the
+fresh run is a hard failure — a bench that silently stopped producing a
+gated metric must not pass the gate (fresh-only keys are still fine: new
+sweep points never break the check).  Raw wall times are deliberately NOT
+compared: CI runners are too noisy for absolute times, but the ratios
+divide that noise out.
 """
 
 import argparse
@@ -41,11 +45,24 @@ def _ratios_fig4(d: dict) -> dict[str, float]:
     return out
 
 
+def _ratios_hessian(d: dict) -> dict[str, float]:
+    # fused-vs-composed Gram speedups; the composed rows' ratio is 1.0 by
+    # construction and carries no signal
+    return {f"hessian/rows[{name}].speedup_vs_composed":
+            float(v["speedup_vs_composed"])
+            for name, v in d.get("rows", {}).items()
+            if "speedup_vs_composed" in v and not name.startswith("composed")}
+
+
 def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
-    """Keys regressed by more than ``tolerance`` (empty = pass)."""
+    """Keys regressed by more than ``tolerance`` or missing from the
+    fresh run (empty = pass)."""
     bad = []
     for key, base in baseline.items():
-        if key not in fresh or base <= 0.0:
+        if base <= 0.0:
+            continue
+        if key not in fresh:
+            bad.append(f"{key}: {base:.3f} -> MISSING from the fresh run")
             continue
         if fresh[key] < (1.0 - tolerance) * base:
             bad.append(f"{key}: {base:.3f} -> {fresh[key]:.3f} "
@@ -59,17 +76,22 @@ def main(argv=None) -> int:
                     help="committed BENCH_fig4.json (copied aside)")
     ap.add_argument("--baseline-serve", required=True,
                     help="committed BENCH_serve.json (copied aside)")
+    ap.add_argument("--baseline-hessian", required=True,
+                    help="committed BENCH_hessian.json (copied aside)")
     ap.add_argument("--fig4", default="BENCH_fig4.json")
     ap.add_argument("--serve", default="BENCH_serve.json")
+    ap.add_argument("--hessian", default="BENCH_hessian.json")
     ap.add_argument("--tolerance", type=float, default=0.20,
                     help="allowed fractional drop per ratio (default 0.20)")
     args = ap.parse_args(argv)
 
     load = lambda p: json.load(open(p))
     baseline = {**_ratios_fig4(load(args.baseline_fig4)),
-                **_ratios_serve(load(args.baseline_serve))}
+                **_ratios_serve(load(args.baseline_serve)),
+                **_ratios_hessian(load(args.baseline_hessian))}
     fresh = {**_ratios_fig4(load(args.fig4)),
-             **_ratios_serve(load(args.serve))}
+             **_ratios_serve(load(args.serve)),
+             **_ratios_hessian(load(args.hessian))}
 
     bad = compare(baseline, fresh, args.tolerance)
     for key in sorted(baseline):

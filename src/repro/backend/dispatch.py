@@ -54,6 +54,11 @@ class DispatchTable:
                            this minor-axis length.
     ``force``              None (auto) or one of "pallas"/"xla"/"ref" —
                            pins every op to one lowering.
+    ``overlap_min_rows``   pipelined collectives (DESIGN.md §9): minimum
+                           output rows per chunk before ``overlap="auto"``
+                           splits the Phase-3 contraction.  0 = use the
+                           backend's sublane (a chunk thinner than the
+                           padding alignment is pure overhead).
     ``calibrated``         True when the transition points came from
                            measurements rather than the defaults.
     """
@@ -61,6 +66,7 @@ class DispatchTable:
     short_wide_ratio: float = DEFAULT_SHORT_WIDE_RATIO
     pad_cast_min_cols: int = DEFAULT_PAD_CAST_MIN_COLS
     force: Optional[str] = None
+    overlap_min_rows: int = 0
     calibrated: bool = False
 
     def __post_init__(self):
@@ -121,6 +127,31 @@ class DispatchTable:
             return False
         return n_cols >= self.pad_cast_min_cols
 
+    def overlap_chunks(self, rows: int, group: Optional[int],
+                       spec: BackendSpec,
+                       prefer=None) -> int:
+        """Chunk count for a pipelined gemv -> psum super-stage
+        (DESIGN.md §9).
+
+        ``rows`` is the local contraction's output-row count (the chunked
+        axis), ``group`` the static reduction-group size (None when the
+        plan did not record it — treated as pipeline-eligible).
+        ``prefer`` is the resolved ``ExecOpts.overlap``: ``None`` pins
+        serial, an int pins that chunk count (clamped to ``rows``), and
+        ``"auto"`` consults the transition points — decline when there is
+        nothing to overlap (group of 1) or when chunks would fall under
+        ``overlap_min_rows`` (default: the backend's sublane, so no chunk
+        is thinner than the padding alignment).
+        """
+        if prefer is None:
+            return 1
+        if isinstance(prefer, int) and not isinstance(prefer, bool):
+            return max(1, min(prefer, rows))
+        if group is not None and group <= 1:
+            return 1                     # nothing to overlap with
+        min_rows = self.overlap_min_rows or spec.sublane
+        return max(1, min(spec.overlap_chunks, rows // max(1, min_rows)))
+
     def for_dtype(self, dtype, spec: BackendSpec) -> "DispatchTable":
         """Stage-level view: a forced-Pallas table relaxes to auto for a
         *dtype* the backend's Pallas cannot run.  The mixed-precision
@@ -143,12 +174,14 @@ class DispatchTable:
         force = self.force or "auto"
         cal = "cal" if self.calibrated else "def"
         return (f"{force};swr={self.short_wide_ratio:g};"
-                f"pcc={self.pad_cast_min_cols};{cal}")
+                f"pcc={self.pad_cast_min_cols};"
+                f"omr={self.overlap_min_rows};{cal}")
 
     def to_dict(self) -> dict:
         return {"short_wide_ratio": float(self.short_wide_ratio),
                 "pad_cast_min_cols": int(self.pad_cast_min_cols),
                 "force": self.force,
+                "overlap_min_rows": int(self.overlap_min_rows),
                 "calibrated": bool(self.calibrated)}
 
     @classmethod
@@ -156,6 +189,7 @@ class DispatchTable:
         return cls(short_wide_ratio=float(d["short_wide_ratio"]),
                    pad_cast_min_cols=int(d["pad_cast_min_cols"]),
                    force=d.get("force"),
+                   overlap_min_rows=int(d.get("overlap_min_rows", 0)),
                    calibrated=bool(d.get("calibrated", False)))
 
 

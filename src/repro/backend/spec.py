@@ -55,6 +55,12 @@ class BackendSpec:
     per-tile precision map.  Requesting ``tile_map=`` on a backend
     without it raises :class:`UnsupportedOnBackend` (explicit request,
     never a silent downgrade).
+
+    ``overlap_chunks`` is the backend's pipelined-collective depth
+    (DESIGN.md §9): how many chunks ``overlap="auto"`` splits the Phase-3
+    contraction into when the dispatch table decides pipelining pays.
+    Set from how many collectives the platform can realistically keep in
+    flight, not from the mesh.
     """
 
     name: str
@@ -69,6 +75,7 @@ class BackendSpec:
     lane: int = 128
     default_block_n: int = 512
     default_block_s: int = 128
+    overlap_chunks: int = 4
     peak_flops: float = 0.0          # FLOP/s, native matmul precision
     hbm_bandwidth: float = 0.0       # B/s per device
     link_bandwidth: float = 0.0      # B/s per interconnect link

@@ -237,6 +237,15 @@ class FFTMatvec:
             self, comm_level=comm_level,
             collective=self.collective if collective is None else collective)
 
+    def with_overlap(self, overlap) -> "FFTMatvec":
+        """Same operator with another pipelined-collective preference
+        (``ExecOpts.overlap``, DESIGN.md §9): ``"auto"`` lets the dispatch
+        table decide per backend, an int pins the chunk count, ``None``
+        pins the serial schedule.  Overlap changes the timing of a plan,
+        never its math."""
+        return dataclasses.replace(
+            self, opts=dataclasses.replace(self.opts, overlap=overlap))
+
     def autotune(self, tol: float, *, full_result: bool = False, **kw):
         """Dynamic mixed-precision selection (paper §3.2 at runtime).
 
@@ -306,12 +315,22 @@ class FFTMatvec:
         p_c = math.prod(sizes[a] for a in _as_axes(self.col_axis))
         return (max(p_r, 1), max(p_c, 1))
 
-    def _collective_kind(self, psum_axes: Tuple[str, ...]) -> str:
-        """The emitted collective lowering: the explicit override, else
-        hierarchical whenever the grid has > 1 row (the paper's comm-aware
-        regime) or the reduction group spans several mesh tiers."""
+    def _collective_kind(self, psum_axes: Tuple[str, ...],
+                         adjoint: bool = False) -> str:
+        """The emitted collective lowering, direction-aware.
+
+        Forward (F): the explicit override, else hierarchical whenever the
+        grid has > 1 row (the paper's comm-aware regime) or the reduction
+        group spans several mesh tiers.  Adjoint (F*): the reduction runs
+        over the *row* axis group first, so a single-axis row group has no
+        inner tier to stage through — the hierarchical form there only
+        serializes the flat reduction behind extra regrouping (the
+        BENCH_fig4 rmatvec regression) and is emitted only when the row
+        group itself spans several mesh axes."""
         if self.collective is not None:
             return self.collective
+        if adjoint:
+            return "hierarchical" if len(psum_axes) > 1 else "psum"
         p_r, _ = self.grid_shape()
         return "hierarchical" if (p_r > 1 or len(psum_axes) > 1) else "psum"
 
@@ -324,7 +343,7 @@ class FFTMatvec:
         return {"psum_axis": psum_axes[0] if len(psum_axes) == 1
                 else psum_axes,
                 "psum_groups": tuple(sizes[a] for a in psum_axes),
-                "collective": self._collective_kind(psum_axes),
+                "collective": self._collective_kind(psum_axes, adjoint),
                 "comm_level": self.comm_level}
 
     # -- the one apply path ----------------------------------------------------
@@ -387,13 +406,24 @@ class FFTMatvec:
             return self.rmatmat(D[..., None])[..., 0]
         return self._apply(D, adjoint=True)
 
-    def jitted(self):
-        """Jit-compiled (matvec, rmatvec) pair."""
-        return jax.jit(self.matvec), jax.jit(self.rmatvec)
+    def jitted(self, donate: bool = False):
+        """Jit-compiled (matvec, rmatvec) pair.
 
-    def jitted_block(self):
-        """Jit-compiled (matmat, rmatmat) pair."""
-        return jax.jit(self.matmat), jax.jit(self.rmatmat)
+        ``donate=True`` donates the input block vector's buffer to the
+        computation (``donate_argnums``): with the pipelined super-stage's
+        chunked writes this lets XLA reuse the input allocation for the
+        assembled output instead of holding both live — the caller must
+        not reuse the argument afterwards."""
+        dn = (0,) if donate else ()
+        return (jax.jit(self.matvec, donate_argnums=dn),
+                jax.jit(self.rmatvec, donate_argnums=dn))
+
+    def jitted_block(self, donate: bool = False):
+        """Jit-compiled (matmat, rmatmat) pair (``donate`` as in
+        :meth:`jitted`)."""
+        dn = (0,) if donate else ()
+        return (jax.jit(self.matmat, donate_argnums=dn),
+                jax.jit(self.rmatmat, donate_argnums=dn))
 
     # -- sharding helpers -------------------------------------------------------
     def m_sharding(self, stacked: bool = False):

@@ -57,16 +57,36 @@ class NetworkModel:
     bw_intra: float = 5.0e10         # B/s per device (fast fabric)
     bw_inter: float = 2.5e9          # B/s per device (effective cross-tier
                                      # share for small latency-bound msgs)
+    overlap_efficiency: float = 0.7  # fraction of a chunk's reduction the
+                                     # next chunk's compute hides (DESIGN.md
+                                     # §9) — 0 = no hiding (chunking only
+                                     # adds latency trees), 1 = all but the
+                                     # last chunk's reduction is free
 
     def collective_cost(self, group: int, bytes_local: int,
-                        spans_tiers: bool) -> float:
+                        spans_tiers: bool, chunks: int = 1) -> float:
         """Tree/ring collective over ``group`` devices, ``bytes_local``
-        payload per device: log2(g) latency hops + (g-1)/g bandwidth."""
+        payload per device: log2(g) latency hops + (g-1)/g bandwidth.
+
+        ``chunks > 1`` prices the *pipelined* schedule (DESIGN.md §9): the
+        payload splits into K chunk reductions of bytes/K — each still
+        pays the FULL log2(g) latency tree (latency replicates per chunk,
+        only bandwidth divides) — and ``overlap_efficiency`` of every
+        chunk's cost except the last hides under the next chunk's
+        compute.  At ``overlap_efficiency = 0`` this is strictly worse
+        than the flat collective (K latency trees instead of one), which
+        is what makes the model honest: pipelining pays only when the
+        collective is bandwidth-dominated or the overlap is real.
+        """
         if group <= 1:
             return 0.0
         alpha = self.alpha_inter if spans_tiers else self.alpha_intra
         bw = self.bw_inter if spans_tiers else self.bw_intra
-        return math.log2(group) * alpha + bytes_local * (group - 1) / group / bw
+        chunks = max(1, chunks)
+        t_chunk = (math.log2(group) * alpha
+                   + bytes_local / chunks * (group - 1) / group / bw)
+        exposed = 1.0 + (1.0 - self.overlap_efficiency) * (chunks - 1)
+        return t_chunk * exposed
 
 
 # TPU analogue: the fast domain is one ICI pod (256 chips) and grids go
@@ -76,20 +96,25 @@ TPU_POD_NETWORK = NetworkModel(devices_per_tier=256, flat_grid_max=256)
 
 
 def hierarchical_collective_time(p_r: int, p_c: int, bytes_local: int,
-                                 net: NetworkModel = NetworkModel()) -> float:
+                                 net: NetworkModel = NetworkModel(),
+                                 chunks: int = 1) -> float:
     """Reduce (or broadcast) of a ``bytes_local`` buffer over all
     p = p_r*p_c devices, blocked by the grid: within rows (contiguous ->
     fast domain when p_c fits a tier) then across rows (slow tier).
-    ``p_r = 1`` degenerates to the flat collective."""
+    ``p_r = 1`` degenerates to the flat collective; ``chunks > 1`` prices
+    the pipelined schedule (both tiers chunk together — the super-stage
+    splits the *payload*, and every chunk runs the full staged
+    reduction)."""
     row_spans = p_c > net.devices_per_tier
     cross_spans = p_r > 1 and (p_r * p_c) > net.devices_per_tier
-    return (net.collective_cost(p_c, bytes_local, row_spans)
-            + net.collective_cost(p_r, bytes_local, cross_spans))
+    return (net.collective_cost(p_c, bytes_local, row_spans, chunks)
+            + net.collective_cost(p_r, bytes_local, cross_spans, chunks))
 
 
 def matvec_comm_time(p_r: int, p_c: int, N_t: int, N_d: int, N_m: int,
                      bytes_per_elem: int = 8,
-                     net: NetworkModel = NetworkModel()) -> float:
+                     net: NetworkModel = NetworkModel(),
+                     chunks: int = 1) -> float:
     """Modeled communication of one F matvec + one F* matvec.
 
     Models the paper's accounting: the *data-vector* collectives (F's
@@ -98,24 +123,34 @@ def matvec_comm_time(p_r: int, p_c: int, N_t: int, N_d: int, N_m: int,
     the grid hierarchically blocks them.  (Our eq.-6 decomposition also
     reduces parameter chunks over the p_r rows in F*; that term favors
     small p_r and is excluded from grid *selection* to match [44] §3.7 —
-    see DESIGN.md §6 for the accounting.)"""
+    see DESIGN.md §6 for the accounting.)  ``chunks`` prices the
+    pipelined-collective schedule under ``net.overlap_efficiency``."""
     d_bytes = N_t * math.ceil(N_d / p_r) * bytes_per_elem
     # F: phase-5 reduce of d; F*: phase-1 broadcast of d (same structure)
-    return 2.0 * hierarchical_collective_time(p_r, p_c, d_bytes, net)
+    return 2.0 * hierarchical_collective_time(p_r, p_c, d_bytes, net, chunks)
 
 
 def choose_grid(p: int, N_t: int, N_d: int, N_m: int,
                 bytes_per_elem: int = 8,
-                net: NetworkModel = NetworkModel()) -> tuple[int, int]:
+                net: NetworkModel = NetworkModel(),
+                chunks: int = 1) -> tuple[int, int]:
     """Brute-force the divisor pairs of ``p`` for the cheapest modeled
     comm.  Rows are capped at N_d (a row without sensors does no work).
     Up to ``net.flat_grid_max`` devices the flat grid is returned outright
     (the paper's measured regime: p_r = 1 through 512 GPUs — extra rows
     only add the F* parameter-chunk reduction); the search runs above it.
+    ``chunks`` costs every candidate under the pipelined schedule.  Note
+    pipelining shifts the cost balance toward latency (each chunk pays
+    the full log2 tree while bandwidth divides), so the modeled optimum
+    under ``chunks > 1`` may legitimately prefer fewer slow-tier hops
+    than the serial-schedule grid — selection stays honest rather than
+    pinned.
 
-    Under the default :class:`NetworkModel` this agrees with
-    :func:`paper_grid` at every device count the paper reports
-    (8/512/1,024/2,048/4,096)."""
+    Under the default :class:`NetworkModel` at ``chunks = 1`` this agrees
+    with :func:`paper_grid` at every device count the paper reports
+    (8/512/1,024/2,048/4,096) — asserted in
+    ``tests/test_distributed.py``, alongside the overlap-term consistency
+    checks."""
     if p <= net.flat_grid_max:
         return (1, p)
     best, best_t = (1, p), float("inf")
@@ -123,7 +158,8 @@ def choose_grid(p: int, N_t: int, N_d: int, N_m: int,
         if p % p_r:
             continue
         p_c = p // p_r
-        t = matvec_comm_time(p_r, p_c, N_t, N_d, N_m, bytes_per_elem, net)
+        t = matvec_comm_time(p_r, p_c, N_t, N_d, N_m, bytes_per_elem, net,
+                             chunks)
         if t < best_t - 1e-15:
             best, best_t = (p_r, p_c), t
     return best

@@ -48,7 +48,7 @@ from . import precision as prec
 from .precision import PrecisionConfig
 
 STAGE_KINDS = ("pad", "fft", "reorder", "gemv", "ifft", "mask", "unpad",
-               "psum")
+               "psum", "gemv_psum")
 
 # How a psum stage lowers (paper §4.2.2 / DESIGN.md §6):
 #   "psum"            one flat all-reduce over the whole axis group
@@ -86,6 +86,17 @@ class ExecOpts:
                        lets the dispatch table decide.  A True preference
                        the backend cannot honor (f64 stages) falls back —
                        memory ops are never worth an error.
+    ``overlap``        chunk count of the pipelined ``gemv_psum``
+                       super-stage (DESIGN.md §9): ``"auto"`` resolves it
+                       per backend via
+                       :meth:`repro.backend.DispatchTable.overlap_chunks`
+                       (and may decline — K = 1 is the serial schedule),
+                       an ``int`` pins K chunks, ``None`` never pipelines.
+                       Single-device plans have no collective stage and
+                       are unchanged by this knob.  Overlap changes the
+                       *timing* of a plan, never its math: the chunked
+                       schedule is row-partition-exact w.r.t. the serial
+                       one.
 
     Hashable, so operators can pass it as a jit static argument.
     """
@@ -95,6 +106,15 @@ class ExecOpts:
     block_n: Optional[int] = None
     block_s: Optional[int] = None
     fuse_pad_cast: Optional[bool] = None
+    overlap: Union[str, int, None] = "auto"
+
+    def __post_init__(self):
+        ov = self.overlap
+        if not (ov is None or ov == "auto"
+                or (isinstance(ov, int) and not isinstance(ov, bool)
+                    and ov >= 1)):
+            raise ValueError(f"overlap must be 'auto', a chunk count >= 1 "
+                             f"or None, got {ov!r}")
 
     def resolve(self) -> "ResolvedOpts":
         """Bind to the concrete backend (probe happens here, at lowering
@@ -105,7 +125,8 @@ class ExecOpts:
         return ResolvedOpts(spec=spec, table=table,
                             block_n=self.block_n or spec.default_block_n,
                             block_s=self.block_s or spec.default_block_s,
-                            fuse_pad_cast=self.fuse_pad_cast)
+                            fuse_pad_cast=self.fuse_pad_cast,
+                            overlap=self.overlap)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +138,7 @@ class ResolvedOpts:
     block_n: int
     block_s: int
     fuse_pad_cast: Optional[bool]
+    overlap: Union[str, int, None] = "auto"
 
 
 def _resolved(opts) -> ResolvedOpts:
@@ -150,6 +172,14 @@ class Stage:
                    tile-centric mixed precision, DESIGN.md §8.  On sharded
                    runs the map's grid partitions the *local* operand
                    shard element-wise.
+    ``comm``       gemv_psum: the fused reduction's level (what a separate
+                   psum stage would carry as ``level``; the super-stage's
+                   own ``level`` is the gemv compute level).
+    ``body``       gemv_psum: the stages between the chunked gemv and its
+                   reduction (reorder/ifft/unpad for the matvec tail;
+                   empty for the Gram mid-reduction), executed per chunk.
+                   A tuple of frozen stages, so the super-stage stays
+                   hashable/jit-static.
     """
 
     kind: str
@@ -161,6 +191,8 @@ class Stage:
     collective: str = "psum"
     groups: Optional[Tuple[int, ...]] = None
     tile_map: Optional[prec.TileMap] = None
+    comm: Optional[str] = None
+    body: Tuple["Stage", ...] = ()
 
     def __post_init__(self):
         if self.kind not in STAGE_KINDS:
@@ -171,6 +203,9 @@ class Stage:
             raise ValueError(f"unknown collective kind {self.collective!r}")
         if self.groups is not None and len(self.groups) != len(self.axes):
             raise ValueError("groups must match the psum axis tuple")
+        if self.kind == "gemv_psum" and self.axis is None:
+            raise ValueError("gemv_psum needs a psum axis — use a plain "
+                             "gemv stage when there is no collective")
 
     @property
     def axes(self) -> Tuple[str, ...]:
@@ -178,6 +213,17 @@ class Stage:
         if self.axis is None:
             return ()
         return (self.axis,) if isinstance(self.axis, str) else self.axis
+
+    # -- gemv_psum expansion -------------------------------------------------
+    def gemv_stage(self) -> "Stage":
+        """The compute half of a gemv_psum super-stage."""
+        return Stage("gemv", self.level, adjoint=self.adjoint,
+                     operand=self.operand, tile_map=self.tile_map)
+
+    def psum_stage(self) -> "Stage":
+        """The reduction half of a gemv_psum super-stage."""
+        return Stage("psum", self.comm or self.level, axis=self.axis,
+                     collective=self.collective, groups=self.groups)
 
 
 Plan = Tuple[Stage, ...]
@@ -344,8 +390,105 @@ def _psum(stage, x, operands, N_t, S, opts):
     return reduce_one(x)
 
 
+def _overlap_chunks(stage, rows: int, opts) -> int:
+    """Resolve the chunk count of a pipelined super-stage at lowering time
+    (DESIGN.md §9): the ``ExecOpts.overlap`` preference against the
+    backend's dispatch table, the local output-row count, and the static
+    reduction-group size.  A gemv carrying a tile map never chunks — the
+    map's grid partitions the WHOLE local operand, and re-gridding per
+    chunk would change the quantization (losing parity with the serial
+    plan)."""
+    if stage.tile_map is not None:
+        return 1
+    group = None
+    if stage.groups is not None:
+        group = 1
+        for g in stage.groups:
+            group *= g
+    return opts.table.overlap_chunks(rows, group, opts.spec,
+                                     prefer=opts.overlap)
+
+
+def _chunk_bounds(rows: int, K: int):
+    """K near-equal static (start, size) row chunks (empty chunks drop)."""
+    base, rem = divmod(rows, K)
+    bounds, start = [], 0
+    for i in range(K):
+        size = base + (1 if i < rem else 0)
+        if size:
+            bounds.append((start, size))
+        start += size
+    return bounds
+
+
+def _assemble_chunks(pieces, rows: int, S: int):
+    """Stitch per-chunk outputs back into the serial row order.
+
+    Buffer reuse (the plan-lowering side of DESIGN.md §9's donation rule):
+    chunks write into ONE preallocated output via in-place dynamic
+    updates, which XLA aliases instead of materializing a concatenate
+    copy of every chunk buffer."""
+    if isinstance(pieces[0], tuple):
+        # plane-pair carrier: rows live on axis 1 (TOSI layout)
+        planes = []
+        for p in range(len(pieces[0])):
+            tmpl = pieces[0][p]
+            buf = jnp.zeros(tmpl.shape[:1] + (rows,) + tmpl.shape[2:],
+                            tmpl.dtype)
+            start = 0
+            for piece in pieces:
+                idx = (0, start) + (0,) * (piece[p].ndim - 2)
+                buf = jax.lax.dynamic_update_slice(buf, piece[p], idx)
+                start += piece[p].shape[1]
+            planes.append(buf)
+        return tuple(planes)
+    # flat time-domain carrier (S*rows_chunk, T): the stacked layout is
+    # S-major, so chunk rows interleave — write through an (S, rows, T) view
+    T = pieces[0].shape[-1]
+    buf = jnp.zeros((S, rows, T), pieces[0].dtype)
+    start = 0
+    for piece in pieces:
+        mc = piece.shape[0] // S
+        buf = jax.lax.dynamic_update_slice(buf, piece.reshape(S, mc, T),
+                                           (0, start, 0))
+        start += mc
+    return buf.reshape(S * rows, T)
+
+
+def _gemv_psum(stage, x, operands, N_t, S, opts):
+    # The pipelined gemv -> psum super-stage (DESIGN.md §9): the Phase-3
+    # contraction splits along its OUTPUT rows axis into K chunks so chunk
+    # k's reduction is in flight while chunk k+1 computes (XLA's async
+    # collectives overlap them inside shard_map).  Rows are independent in
+    # both the contraction and the elementwise reduction, so the chunked
+    # schedule computes every row exactly as the serial plan does — parity
+    # is row-partition-exact, not just to roundoff.
+    A_re, A_im = operands[stage.operand]
+    axis = 2 if stage.adjoint else 1         # the gemv's output-rows axis
+    rows = A_re.shape[axis]
+    K = min(_overlap_chunks(stage, rows, opts), rows)
+    sub = (stage.gemv_stage(),) + stage.body + (stage.psum_stage(),)
+    if K <= 1:
+        # serial schedule: delegate to the constituent stages so the
+        # instrumentation (gemv/psum/collective:* counts) matches the
+        # unpipelined plan stage for stage
+        return run_stages(sub, x, operands, N_t=N_t, opts=opts, S=S)
+    for counter in _active_counters:
+        counter[f"collective:pipelined:{K}"] += 1
+    pieces = []
+    for start, size in _chunk_bounds(rows, K):
+        chunk_ops = dict(operands)
+        chunk_ops[stage.operand] = (
+            jax.lax.slice_in_dim(A_re, start, start + size, axis=axis),
+            jax.lax.slice_in_dim(A_im, start, start + size, axis=axis))
+        pieces.append(run_stages(sub, x, chunk_ops, N_t=N_t, opts=opts,
+                                 S=S))
+    return _assemble_chunks(pieces, rows, S)
+
+
 _STAGE_IMPLS = {"pad": _pad, "fft": _fft, "reorder": _reorder, "gemv": _gemv,
-                "ifft": _ifft, "mask": _mask, "unpad": _unpad, "psum": _psum}
+                "ifft": _ifft, "mask": _mask, "unpad": _unpad, "psum": _psum,
+                "gemv_psum": _gemv_psum}
 
 
 # ---------------------------------------------------------------------------
@@ -377,8 +520,21 @@ def record_stages() -> Iterator[collections.Counter]:
 
 
 def stage_counts(plan: Plan) -> collections.Counter:
-    """Static stage census of a plan: ``{kind: count}``."""
-    return collections.Counter(stage.kind for stage in plan)
+    """Static stage census of a plan: ``{kind: count}``.
+
+    A ``gemv_psum`` super-stage counts under its own kind AND under each
+    constituent kind (``gemv``, its body stages, ``psum``), so censuses
+    of pipelined and serial plans agree on the constituent totals — the
+    super-stage is a schedule change, not a work change."""
+    counter: collections.Counter = collections.Counter()
+    for stage in plan:
+        counter[stage.kind] += 1
+        if stage.kind == "gemv_psum":
+            counter["gemv"] += 1
+            for b in stage.body:
+                counter[b.kind] += 1
+            counter["psum"] += 1
+    return counter
 
 
 def run_stages(stages: Sequence[Stage], x, operands: Mapping, *, N_t: int,
@@ -438,7 +594,8 @@ def matvec_plan(cfg: PrecisionConfig, *, adjoint: bool = False,
                 psum_axis=None, operand: str = "F",
                 collective: str = "psum",
                 psum_groups: Optional[Tuple[int, ...]] = None,
-                comm_level: Optional[str] = None) -> Plan:
+                comm_level: Optional[str] = None,
+                pipelined: bool = True) -> Plan:
     """The 5-phase matvec pipeline as a plan (paper §2.4).
 
     Forward (``d = F m``) and adjoint (``m = F* d``) differ only in the
@@ -449,21 +606,41 @@ def matvec_plan(cfg: PrecisionConfig, *, adjoint: bool = False,
     level).  ``psum_groups`` carries the static device count per axis.
     ``operand`` selects the planes the gemv stage contracts against (the
     circulant Gram plan is this same pipeline over the "G" blocks).
+
+    With a collective stage present and ``pipelined=True`` (the default),
+    the gemv and its reduction are emitted as ONE ``gemv_psum``
+    super-stage whose body carries the tail stages between them — the
+    pipelined-collective form (DESIGN.md §9).  Whether it actually chunks
+    is decided at plan-lowering time from ``ExecOpts.overlap``;
+    ``pipelined=False`` keeps the flat serial stage list (the parity
+    reference).  Single-device plans (no ``psum_axis``) are identical
+    either way.
     """
-    stages = [
+    head = [
         Stage("pad", cfg.pad),
         Stage("fft", cfg.fft),
         Stage("reorder", cfg.reorder_level("fft", "gemv"), to_tosi=True),
-        Stage("gemv", cfg.gemv, adjoint=adjoint, operand=operand,
-              tile_map=_gemv_tiles(cfg, operand)),
+    ]
+    gemv = Stage("gemv", cfg.gemv, adjoint=adjoint, operand=operand,
+                 tile_map=_gemv_tiles(cfg, operand))
+    tail = (
         Stage("reorder", cfg.reorder_level("gemv", "ifft"), to_tosi=False),
         Stage("ifft", cfg.ifft),
         Stage("unpad", cfg.reduce),
-    ]
-    if psum_axis is not None:
-        stages.append(_psum_stage(cfg.reduce, psum_axis, collective,
-                                  psum_groups, comm_level))
-    return tuple(stages)
+    )
+    if psum_axis is None:
+        return tuple(head) + (gemv,) + tail
+    if pipelined:
+        fused = Stage("gemv_psum", cfg.gemv, adjoint=adjoint,
+                      operand=operand,
+                      tile_map=_gemv_tiles(cfg, operand),
+                      axis=psum_axis, collective=collective,
+                      groups=psum_groups,
+                      comm=comm_level or cfg.reduce, body=tail)
+        return tuple(head) + (fused,)
+    return tuple(head) + (gemv,) + tail + (
+        _psum_stage(cfg.reduce, psum_axis, collective, psum_groups,
+                    comm_level),)
 
 
 def gram_plan(cfg: PrecisionConfig, *, space: str = "parameter",
@@ -471,7 +648,8 @@ def gram_plan(cfg: PrecisionConfig, *, space: str = "parameter",
               collective: str = "psum",
               mid_psum_groups: Optional[Tuple[int, ...]] = None,
               psum_groups: Optional[Tuple[int, ...]] = None,
-              comm_level: Optional[str] = None) -> Plan:
+              comm_level: Optional[str] = None,
+              pipelined: bool = True) -> Plan:
     """The fused Fourier-domain Gram pipeline (Hessian actions, Remark 1).
 
     ``space="parameter"`` builds F*F (CGNR's normal operator),
@@ -495,6 +673,10 @@ def gram_plan(cfg: PrecisionConfig, *, space: str = "parameter",
     ``collective``/``comm_level``/``*_groups`` parameterize both Psum
     stages exactly as in :func:`matvec_plan` (the mid reduction defaults
     to the reorder level between the gemv it completes and the ifft).
+    ``pipelined`` fuses each gemv with the reduction it feeds into a
+    ``gemv_psum`` super-stage (DESIGN.md §9): the mid reduction sits
+    directly after the first gemv (empty body), the final one carries the
+    reorder/ifft/unpad tail.
     """
     if space not in ("parameter", "data"):
         raise ValueError(f"unknown gram space {space!r}")
@@ -502,7 +684,7 @@ def gram_plan(cfg: PrecisionConfig, *, space: str = "parameter",
         # the matvec pipeline verbatim, contracting the per-bin G blocks
         return matvec_plan(cfg, psum_axis=psum_axis, operand="G",
                            collective=collective, psum_groups=psum_groups,
-                           comm_level=comm_level)
+                           comm_level=comm_level, pipelined=pipelined)
     if mode != "exact":
         raise ValueError(f"unknown gram mode {mode!r}")
     # exact: parameter space runs F then F* (first gemv forward), data space
@@ -513,25 +695,40 @@ def gram_plan(cfg: PrecisionConfig, *, space: str = "parameter",
         Stage("pad", cfg.pad),
         Stage("fft", cfg.fft),
         Stage("reorder", cfg.reorder_level("fft", "gemv"), to_tosi=True),
-        Stage("gemv", cfg.gemv, adjoint=first_adjoint,
-              tile_map=_gemv_tiles(cfg)),
     ]
-    if mid_psum_axis is not None:
-        stages.append(_psum_stage(mid_level, mid_psum_axis, collective,
-                                  mid_psum_groups, comm_level))
+    if mid_psum_axis is not None and pipelined:
+        stages.append(Stage("gemv_psum", cfg.gemv, adjoint=first_adjoint,
+                            tile_map=_gemv_tiles(cfg), axis=mid_psum_axis,
+                            collective=collective, groups=mid_psum_groups,
+                            comm=comm_level or mid_level))
+    else:
+        stages.append(Stage("gemv", cfg.gemv, adjoint=first_adjoint,
+                            tile_map=_gemv_tiles(cfg)))
+        if mid_psum_axis is not None:
+            stages.append(_psum_stage(mid_level, mid_psum_axis, collective,
+                                      mid_psum_groups, comm_level))
     stages += [
         Stage("reorder", mid_level, to_tosi=False),
         Stage("ifft", cfg.ifft),
         Stage("mask", prec.min_level(cfg.ifft, cfg.fft)),
         Stage("fft", cfg.fft),
         Stage("reorder", cfg.reorder_level("fft", "gemv"), to_tosi=True),
-        Stage("gemv", cfg.gemv, adjoint=not first_adjoint,
-              tile_map=_gemv_tiles(cfg)),
+    ]
+    gemv2 = Stage("gemv", cfg.gemv, adjoint=not first_adjoint,
+                  tile_map=_gemv_tiles(cfg))
+    tail = (
         Stage("reorder", cfg.reorder_level("gemv", "ifft"), to_tosi=False),
         Stage("ifft", cfg.ifft),
         Stage("unpad", cfg.reduce),
-    ]
-    if psum_axis is not None:
-        stages.append(_psum_stage(cfg.reduce, psum_axis, collective,
-                                  psum_groups, comm_level))
-    return tuple(stages)
+    )
+    if psum_axis is None:
+        return tuple(stages) + (gemv2,) + tail
+    if pipelined:
+        fused = Stage("gemv_psum", cfg.gemv, adjoint=not first_adjoint,
+                      tile_map=_gemv_tiles(cfg), axis=psum_axis,
+                      collective=collective, groups=psum_groups,
+                      comm=comm_level or cfg.reduce, body=tail)
+        return tuple(stages) + (fused,)
+    return tuple(stages) + (gemv2,) + tail + (
+        _psum_stage(cfg.reduce, psum_axis, collective, psum_groups,
+                    comm_level),)

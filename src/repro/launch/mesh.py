@@ -37,7 +37,7 @@ def make_test_mesh(shape=(2, 4), axes=("data", "model")):
 
 
 def fftmatvec_grid(mesh, *, N_t: int = 1000, N_d: int = 100,
-                   n_m_per_device: int = 5000, net=None):
+                   n_m_per_device: int = 5000, net=None, chunks: int = 1):
     """Map a mesh onto FFTMatvec's 2-D (row, col) grid — the same comm
     model :func:`repro.core.choose_grid` brute-forces, restricted to the
     grids this mesh can realize.
@@ -50,7 +50,10 @@ def fftmatvec_grid(mesh, *, N_t: int = 1000, N_d: int = 100,
     of the paper's intra-rack fabric vs Slingshot) wins: single-pod 256
     chips stay flat (one fast domain), the 2x16x16 multi-pod mesh goes
     hierarchical with rows = ``("pod",)``.  Shape defaults are the
-    weak-scaled paper workload (N_m = 5000 per device).  Returns
+    weak-scaled paper workload (N_m = 5000 per device).  ``chunks``
+    prices every candidate split under the pipelined-collective schedule
+    (``net.overlap_efficiency``, DESIGN.md §9) so a mesh laid out for a
+    pipelined run is costed with the schedule it will execute.  Returns
     ``(row_axes, col_axes)`` name tuples (row may be empty)."""
     from repro.core import TPU_POD_NETWORK, matvec_comm_time
     net = net or TPU_POD_NETWORK
@@ -65,7 +68,8 @@ def fftmatvec_grid(mesh, *, N_t: int = 1000, N_d: int = 100,
         p_r = math.prod(sizes[:k]) if k else 1
         if p_r > min(p, N_d):           # a row without sensors does no work
             break
-        t = matvec_comm_time(p_r, p // p_r, N_t, N_d, N_m, net=net)
+        t = matvec_comm_time(p_r, p // p_r, N_t, N_d, N_m, net=net,
+                             chunks=chunks)
         if t < best_t - 1e-15:
             best, best_t = k, t
     return axes[:best], axes[best:]

@@ -126,6 +126,13 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
     exhaustive sweep, the baseline's error-vs-itself is 0, so some config
     always qualifies); re-tune with a fresh cache to re-measure a
     tolerance far from the one originally tuned for.
+
+    The operator's pipelined-collective setting (``ExecOpts.overlap``,
+    DESIGN.md §9) changes every candidate's measured *time* but none of
+    the measured *errors* (the chunked schedule is row-partition-exact),
+    so it needs no eq.-(6) term — but cached entries key on it
+    (``;ov=`` detail): timings taken under one schedule never answer a
+    query for another, while the error model stays schedule-blind.
     """
     if ladder is None:
         ladder = ("d", "s") if op.precision.highest() == "d" else ("s", "h")

@@ -93,6 +93,11 @@ class CacheKey:
         r = op.opts.resolve()
         detail = (f"disp={r.table.describe()};bn={r.block_n};"
                   f"bs={r.block_s};mode={mode}")
+        if r.overlap is not None:
+            # the pipelined-collective chunking (DESIGN.md §9) changes a
+            # config's measured TIME but not its error — timings cached
+            # under one schedule must not answer a query for another
+            detail += f";ov={r.overlap}"
         if variant in ("matmat", "rmatmat"):
             detail += f";S={n_rhs}"
         if tiles is not None:

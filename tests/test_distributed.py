@@ -262,6 +262,103 @@ def _run_psum_stage(stage, x):
     return f(x)
 
 
+def test_pipelined_overlap_parity_subprocess():
+    """The pipelined gemv_psum schedule (DESIGN.md §9) against its serial
+    reference on a real 2x4 mesh: bit-level (row-partition-exact) parity
+    for matvec/rmatvec/gram, single- and multi-RHS, with the chunked
+    launches observable in the stage instrumentation."""
+    res = _run(r"""
+import jax, json
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.core import (FFTMatvec, dense_matvec, dense_rmatvec,
+                        random_block_column, record_stages, rel_l2)
+from repro.jax_compat import make_mesh
+Nt, Nd, Nm, S = 16, 64, 128, 3
+F_col = random_block_column(jax.random.PRNGKey(0), Nt, Nd, Nm, dtype=jnp.float64)
+m = jax.random.normal(jax.random.PRNGKey(1), (Nm, Nt), dtype=jnp.float64)
+d = jax.random.normal(jax.random.PRNGKey(2), (Nd, Nt), dtype=jnp.float64)
+M = jax.random.normal(jax.random.PRNGKey(3), (Nm, Nt, S), dtype=jnp.float64)
+D = jax.random.normal(jax.random.PRNGKey(4), (Nd, Nt, S), dtype=jnp.float64)
+base = FFTMatvec.from_block_column(F_col, mesh=make_mesh((2, 4), ("row", "col")))
+pipe, ser = base.with_overlap(4), base.with_overlap(None)
+def counts_of(fn, v, sh):
+    with record_stages() as c:
+        out = fn(jax.device_put(v, sh))
+    return out, dict(c)
+y_p, c_p = counts_of(pipe.matvec, m, pipe.m_sharding())
+y_s, c_s = counts_of(ser.matvec, m, ser.m_sharding())
+res = {"c_pipe": c_p, "c_ser": c_s,
+       "par_mv": rel_l2(y_p, y_s),
+       "e_dense": rel_l2(y_p, dense_matvec(F_col, m))}
+res["par_rmv"] = rel_l2(pipe.rmatvec(jax.device_put(d, pipe.d_sharding())),
+                        ser.rmatvec(jax.device_put(d, ser.d_sharding())))
+res["par_mm"] = rel_l2(
+    pipe.matmat(jax.device_put(M, pipe.m_sharding(stacked=True))),
+    ser.matmat(jax.device_put(M, ser.m_sharding(stacked=True))))
+res["par_rmm"] = rel_l2(
+    pipe.rmatmat(jax.device_put(D, pipe.d_sharding(stacked=True))),
+    ser.rmatmat(jax.device_put(D, ser.d_sharding(stacked=True))))
+gp, gs = pipe.gram(space="parameter"), ser.gram(space="parameter")
+with record_stages() as cg:
+    g_out = gp.apply(jax.device_put(m, gp.v_sharding()))
+res["c_gram"] = dict(cg)
+res["par_gram"] = rel_l2(g_out, gs.apply(jax.device_put(m, gs.v_sharding())))
+res["e_gram_dense"] = rel_l2(g_out,
+                             dense_rmatvec(F_col, dense_matvec(F_col, m)))
+# auto mode consults the dispatch table: 32 local output rows / sublane 8
+# -> the backend's chunk depth, observable in the counter key
+with record_stages() as ca:
+    base.matvec(jax.device_put(m, base.m_sharding()))
+res["auto_keys"] = sorted(k for k in dict(ca) if k.startswith("collective:pipelined"))
+print(json.dumps(res))
+""")
+    # pinned K=4: one super-stage launching four chunk reductions
+    assert res["c_pipe"]["gemv_psum"] == 1
+    assert res["c_pipe"]["collective:pipelined:4"] == 1
+    assert res["c_pipe"]["psum"] == 4 and res["c_pipe"]["gemv"] == 4
+    # serial: same plan shape, one reduction, no pipelined counter
+    assert res["c_ser"]["gemv_psum"] == 1 and res["c_ser"]["psum"] == 1
+    assert not any(k.startswith("collective:pipelined")
+                   for k in res["c_ser"])
+    # row-partition-exact parity (not merely tolerance-level agreement)
+    for key in ("par_mv", "par_rmv", "par_mm", "par_rmm", "par_gram"):
+        assert res[key] < 1e-15, (key, res[key])
+    assert res["e_dense"] < 1e-13 and res["e_gram_dense"] < 1e-12
+    # the exact Gram chunks BOTH reductions (mid + final)
+    assert res["c_gram"]["collective:pipelined:4"] == 2
+    # auto engaged on its own at this shape
+    assert res["auto_keys"] and res["auto_keys"][0].split(":")[-1] != "1"
+
+
+def test_pipelined_declines_at_thin_shapes_subprocess():
+    """Auto overlap must decline (K = 1, serial counters intact) when the
+    local contraction is too thin to chunk — the existing distributed
+    suite's tiny shapes keep their exact collective censuses."""
+    res = _run(r"""
+import jax, json
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.core import (FFTMatvec, dense_matvec, random_block_column,
+                        record_stages, rel_l2)
+from repro.jax_compat import make_mesh
+Nt, Nd, Nm = 16, 6, 32
+F_col = random_block_column(jax.random.PRNGKey(0), Nt, Nd, Nm, dtype=jnp.float64)
+m = jax.random.normal(jax.random.PRNGKey(1), (Nm, Nt), dtype=jnp.float64)
+op = FFTMatvec.from_block_column(F_col, mesh=make_mesh((2, 4), ("row", "col")))
+with record_stages() as c:
+    out = op.matvec(jax.device_put(m, op.m_sharding()))
+print(json.dumps({"err": rel_l2(out, dense_matvec(F_col, m)),
+                  "counts": dict(c)}))
+""")
+    assert res["err"] < 1e-13
+    # 3 local rows < 2 sublanes: the super-stage ran its serial expansion
+    assert res["counts"]["gemv_psum"] == 1
+    assert res["counts"]["psum"] == 1 and res["counts"]["gemv"] == 1
+    assert not any(k.startswith("collective:pipelined")
+                   for k in res["counts"])
+
+
 def test_psum_restores_carrier_dtype():
     """Regression: a psum at a low comm level must reduce at that level
     but hand the next stage the *incoming* carrier dtype — the old code
@@ -390,3 +487,67 @@ def test_fftmatvec_grid_consistent_with_choose_grid():
     # the flat regime threshold mirrors choose_grid's
     assert choose_grid(256, 1000, 100, 5000 * 256,
                        net=TPU_POD_NETWORK) == (1, 256)
+
+
+# ---------------------------------------------------------------------------
+# pipelined-collective cost term (DESIGN.md §9) — pure host-side model
+# ---------------------------------------------------------------------------
+
+def test_overlap_term_zero_efficiency_never_wins():
+    """With nothing hidden, chunking only multiplies latency trees: the
+    pipelined cost must dominate the flat collective at every depth —
+    this is what keeps the model honest about small messages."""
+    net = NetworkModel(overlap_efficiency=0.0)
+    for spans in (False, True):
+        for nbytes in (8 * 1024, 8 * 10 ** 6):
+            serial = net.collective_cost(8, nbytes, spans)
+            for k in (2, 4, 16):
+                assert net.collective_cost(8, nbytes, spans, chunks=k) \
+                    >= serial
+
+
+def test_overlap_term_hides_bandwidth_not_latency():
+    """Default efficiency: a bandwidth-dominated collective gets cheaper
+    under chunking (most of each chunk's wire time hides under the next
+    chunk's compute), a latency-bound one gets strictly worse (the log2
+    tree replicates per chunk and cannot be divided)."""
+    net = NetworkModel()
+    big, small = 512 * 10 ** 6, 64
+    assert net.collective_cost(8, big, True, chunks=4) \
+        < net.collective_cost(8, big, True)
+    assert net.collective_cost(8, small, True, chunks=4) \
+        > net.collective_cost(8, small, True)
+    # perfect overlap floors at ONE chunk's cost, never below the final
+    # chunk's exposed reduction
+    perfect = NetworkModel(overlap_efficiency=1.0)
+    t4 = perfect.collective_cost(8, big, True, chunks=4)
+    assert t4 == pytest.approx(
+        perfect.collective_cost(8, big / 4, True), rel=1e-12)
+
+
+def test_choose_grid_overlap_consistency():
+    """The serial-schedule contract is pinned: ``chunks=1`` reproduces
+    the paper grids everywhere.  A chunked schedule re-costs every
+    candidate and must still return a valid divisor grid no worse (under
+    its own schedule) than both the serial optimum and the flat grid."""
+    for p in (8, 512, 1024, 2048, 4096):
+        assert choose_grid(p, 1000, 100, 5000 * p, chunks=1) \
+            == paper_grid(p), p
+    p = 1024
+    for k in (2, 4):
+        p_r, p_c = choose_grid(p, 1000, 100, 5000 * p, chunks=k)
+        assert p_r * p_c == p and p % p_r == 0
+        t_best = matvec_comm_time(p_r, p_c, 1000, 100, 5000 * p, chunks=k)
+        for other in (paper_grid(p), (1, p)):
+            assert t_best <= matvec_comm_time(*other, 1000, 100, 5000 * p,
+                                              chunks=k) + 1e-15
+
+
+def test_fftmatvec_grid_threads_chunks():
+    """launch.mesh.fftmatvec_grid prices realizable splits under the
+    schedule the run will execute: the chunks argument reaches the cost
+    model (same splits at this scale, but the call path is exercised)."""
+    from repro.launch.mesh import fftmatvec_grid
+    multi = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    rows, cols = fftmatvec_grid(multi, chunks=4)
+    assert tuple(rows) + tuple(cols) == ("pod", "data", "model")

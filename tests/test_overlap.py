@@ -1,0 +1,232 @@
+"""Pipelined-collective plan and policy tests (DESIGN.md §9).
+
+Single-device, trace-free where possible: ``gemv_psum`` plan emission,
+``ExecOpts.overlap`` validation, stage censuses, the auto-chunking
+dispatch policy, and tuning-cache key identity.  The multi-device
+bit-parity of the pipelined schedule (chunked vs serial on an 8-device
+mesh) lives in ``tests/test_distributed.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.backend import DispatchTable, XLA_REF, default_table
+from repro.core import (ExecOpts, FFTMatvec, PrecisionConfig, Stage,
+                        TileMap, gram_plan, matvec_plan,
+                        random_block_column, stage_counts)
+from repro.core import pipeline
+from repro.tune.cache import CacheKey
+
+CFG = PrecisionConfig()
+
+
+# ---------------------------------------------------------------------------
+# ExecOpts.overlap: validation, hashability, threading into ResolvedOpts
+# ---------------------------------------------------------------------------
+
+def test_execopts_overlap_accepts_auto_int_none():
+    assert ExecOpts().overlap == "auto"
+    for ov in ("auto", 1, 7, None):
+        assert ExecOpts(overlap=ov).resolve().overlap == ov
+
+
+@pytest.mark.parametrize("bad", [0, -3, True, False, "bogus", 1.5])
+def test_execopts_overlap_rejects_garbage(bad):
+    with pytest.raises(ValueError, match="overlap"):
+        ExecOpts(overlap=bad)
+
+
+def test_execopts_overlap_stays_hashable():
+    # operators pass ExecOpts as a jit static argument — every overlap
+    # flavor must hash, and distinct flavors must not collide
+    opts = {ExecOpts(overlap=ov) for ov in ("auto", 2, None)}
+    assert len(opts) == 3
+
+
+# ---------------------------------------------------------------------------
+# Plan emission: when gemv_psum appears and what it expands to
+# ---------------------------------------------------------------------------
+
+def test_single_device_plan_has_no_super_stage():
+    for pipelined in (True, False):
+        plan = matvec_plan(CFG, pipelined=pipelined)
+        assert [s.kind for s in plan] == [
+            "pad", "fft", "reorder", "gemv", "reorder", "ifft", "unpad"]
+
+
+def test_matvec_plan_fuses_gemv_with_its_reduction():
+    plan = matvec_plan(CFG, psum_axis=("row", "col"),
+                       collective="hierarchical", psum_groups=(2, 4))
+    assert [s.kind for s in plan] == ["pad", "fft", "reorder", "gemv_psum"]
+    fused = plan[-1]
+    assert [b.kind for b in fused.body] == ["reorder", "ifft", "unpad"]
+    assert fused.comm == CFG.reduce
+    assert fused.groups == (2, 4)
+    # the expansion halves must be exactly the serial plan's stages
+    serial = matvec_plan(CFG, psum_axis=("row", "col"),
+                         collective="hierarchical", psum_groups=(2, 4),
+                         pipelined=False)
+    assert (fused.gemv_stage(),) + fused.body + (fused.psum_stage(),) \
+        == serial[3:]
+
+
+def test_adjoint_flag_survives_fusion():
+    fused = matvec_plan(CFG, adjoint=True, psum_axis="row")[-1]
+    assert fused.kind == "gemv_psum" and fused.adjoint
+    assert fused.gemv_stage().adjoint
+
+
+def test_gram_plan_fuses_both_reductions():
+    plan = gram_plan(CFG, mid_psum_axis="col", psum_axis="row",
+                     mid_psum_groups=(4,), psum_groups=(2,))
+    kinds = [s.kind for s in plan]
+    assert kinds.count("gemv_psum") == 2 and "psum" not in kinds
+    mid, final = [s for s in plan if s.kind == "gemv_psum"]
+    assert mid.body == ()          # the mid reduction feeds the ifft leg
+    assert [b.kind for b in final.body] == ["reorder", "ifft", "unpad"]
+    # census parity with the serial form: same constituent totals
+    serial = gram_plan(CFG, mid_psum_axis="col", psum_axis="row",
+                       mid_psum_groups=(4,), psum_groups=(2,),
+                       pipelined=False)
+    fused_counts = stage_counts(plan)
+    del fused_counts["gemv_psum"]
+    assert fused_counts == stage_counts(serial)
+
+
+def test_circulant_gram_plan_passes_pipelined_through():
+    plan = gram_plan(CFG, mode="circulant", psum_axis="col",
+                     psum_groups=(8,))
+    assert plan[-1].kind == "gemv_psum" and plan[-1].operand == "G"
+    serial = gram_plan(CFG, mode="circulant", psum_axis="col",
+                       psum_groups=(8,), pipelined=False)
+    assert serial[-1].kind == "psum"
+
+
+def test_stage_counts_expands_super_stage():
+    plan = matvec_plan(CFG, psum_axis="col")
+    counts = stage_counts(plan)
+    assert counts["gemv_psum"] == 1
+    assert counts["gemv"] == 1 and counts["psum"] == 1
+    assert counts["reorder"] == 2 and counts["ifft"] == 1
+    serial_counts = stage_counts(matvec_plan(CFG, psum_axis="col",
+                                             pipelined=False))
+    del counts["gemv_psum"]
+    assert counts == serial_counts
+
+
+def test_gemv_psum_requires_an_axis():
+    with pytest.raises(ValueError, match="gemv_psum"):
+        Stage("gemv_psum", "s")
+
+
+# ---------------------------------------------------------------------------
+# Auto-chunking policy: DispatchTable.overlap_chunks + the stage gate
+# ---------------------------------------------------------------------------
+
+def test_overlap_chunks_prefer_none_pins_serial():
+    assert DispatchTable().overlap_chunks(4096, 8, XLA_REF,
+                                          prefer=None) == 1
+
+
+def test_overlap_chunks_int_pins_and_clamps():
+    table = DispatchTable()
+    assert table.overlap_chunks(4096, 8, XLA_REF, prefer=3) == 3
+    # a pinned count never exceeds the rows available to split
+    assert table.overlap_chunks(2, 8, XLA_REF, prefer=64) == 2
+    # even when auto would decline (group of 1), an explicit pin wins
+    assert table.overlap_chunks(4096, 1, XLA_REF, prefer=4) == 4
+
+
+def test_overlap_chunks_auto_declines_without_a_group():
+    assert DispatchTable().overlap_chunks(4096, 1, XLA_REF,
+                                          prefer="auto") == 1
+
+
+def test_overlap_chunks_auto_respects_min_rows():
+    table = DispatchTable()     # overlap_min_rows=0 -> spec sublane (8)
+    assert table.overlap_chunks(4096, 8, XLA_REF, prefer="auto") \
+        == XLA_REF.overlap_chunks
+    # thin contractions decline: chunks would fall under the sublane
+    assert table.overlap_chunks(8, 8, XLA_REF, prefer="auto") == 1
+    assert table.overlap_chunks(16, 8, XLA_REF, prefer="auto") == 2
+    # an explicit floor overrides the sublane default
+    wide = DispatchTable(overlap_min_rows=1024)
+    assert wide.overlap_chunks(2048, 8, XLA_REF, prefer="auto") == 2
+    assert wide.overlap_chunks(1000, 8, XLA_REF, prefer="auto") == 1
+    # group=None (plan without recorded groups) is pipeline-eligible
+    assert table.overlap_chunks(4096, None, XLA_REF, prefer="auto") > 1
+
+
+def test_tile_mapped_super_stage_never_chunks():
+    # chunking a tile-mapped operand would re-grid its quantization map —
+    # the stage gate declines regardless of the preference
+    opts = ExecOpts(backend="xla-ref", overlap=4).resolve()
+    tiled = Stage("gemv_psum", "s", axis="col", groups=(8,),
+                  tile_map=TileMap((("s", "h"),)))
+    plain = Stage("gemv_psum", "s", axis="col", groups=(8,))
+    assert pipeline._overlap_chunks(tiled, 4096, opts) == 1
+    assert pipeline._overlap_chunks(plain, 4096, opts) == 4
+
+
+def test_chunk_bounds_cover_rows_exactly():
+    for rows, K in [(10, 3), (8, 8), (5, 7), (1, 4), (4096, 4)]:
+        bounds = pipeline._chunk_bounds(rows, K)
+        assert sum(size for _, size in bounds) == rows
+        assert all(size > 0 for _, size in bounds)
+        starts = [start for start, _ in bounds]
+        assert starts == sorted(starts)
+        # contiguous: each chunk starts where the previous ended
+        for (s0, n0), (s1, _) in zip(bounds, bounds[1:]):
+            assert s1 == s0 + n0
+
+
+# ---------------------------------------------------------------------------
+# Identity: cache keys and dispatch-table persistence carry the schedule
+# ---------------------------------------------------------------------------
+
+def _tiny_op(**kw):
+    F_col = random_block_column(jax.random.PRNGKey(0), 8, 2, 4,
+                                dtype=jnp.float32)
+    return FFTMatvec.from_block_column(
+        F_col, opts=ExecOpts(backend="xla-ref", **kw))
+
+
+def test_cache_key_carries_the_overlap_schedule():
+    op = _tiny_op()
+    auto = CacheKey.for_operator(op, ["d", "s"]).detail
+    assert ";ov=auto" in auto
+    pinned = CacheKey.for_operator(op.with_overlap(6), ["d", "s"]).detail
+    assert ";ov=6" in pinned
+    serial = CacheKey.for_operator(op.with_overlap(None), ["d", "s"]).detail
+    assert ";ov=" not in serial
+    # three schedules, three distinct keys: a timing cached under one
+    # schedule never answers a query for another
+    assert len({auto, pinned, serial}) == 3
+
+
+def test_with_overlap_rebuilds_not_mutates():
+    op = _tiny_op()
+    op2 = op.with_overlap(None)
+    assert op.opts.overlap == "auto" and op2.opts.overlap is None
+    # single-device: no collective stage, so the schedules are identical
+    m = jax.random.normal(jax.random.PRNGKey(1), (4, 8), dtype=jnp.float32)
+    assert jnp.array_equal(op.matvec(m), op2.matvec(m))
+
+
+def test_dispatch_table_roundtrips_overlap_min_rows():
+    table = DispatchTable(overlap_min_rows=128)
+    assert DispatchTable.from_dict(table.to_dict()) == table
+    assert ";omr=128;" in table.describe()
+    # legacy dicts (pre-overlap) load with the sublane-default floor
+    legacy = {k: v for k, v in table.to_dict().items()
+              if k != "overlap_min_rows"}
+    assert DispatchTable.from_dict(legacy).overlap_min_rows == 0
+    # the identity string separates tables differing only in the floor
+    assert DispatchTable().describe() != table.describe()
+
+
+def test_backend_specs_declare_overlap_depth():
+    assert XLA_REF.overlap_chunks >= 1
+    assert default_table(XLA_REF).overlap_chunks(
+        4096, 8, XLA_REF, prefer="auto") >= 1
