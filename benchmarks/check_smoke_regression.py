@@ -42,6 +42,14 @@ def _ratios_fig4(d: dict) -> dict[str, float]:
         for k in ("mixed_speedup", "comm_aware_speedup"):
             if k in v:
                 out[f"fig4/model[{p}].{k}"] = float(v[k])
+    # the ring-vs-pipelined measured leg: gate_ratio is the speedup
+    # clipped at 1.0 (a lucky fast baseline run must never fail honest
+    # later runs; the binding perf floor is the bench's in-child 0.9
+    # assertion) — the gate's job here is to fail if the leg ever stops
+    # being produced or the ring schedule falls well behind pipelined
+    ring = d.get("ring_vs_pipelined", {})
+    if "gate_ratio" in ring:
+        out["fig4/ring_vs_pipelined.gate_ratio"] = float(ring["gate_ratio"])
     return out
 
 

@@ -9,6 +9,8 @@ Public API:
     register_backend                         — registry (REPRO_BACKEND env)
     DispatchTable / default_table /
     calibrate_dispatch                       — shape -> kernel-path table
+    calibrate_overlap / calibrated_network   — measured ring-pipeline
+                                               overlap efficiency -> NetworkModel
 """
 
 from .spec import (BackendSpec, UnsupportedOnBackend,  # noqa: F401
@@ -18,4 +20,6 @@ from .registry import (BACKEND_ENV, current_backend, known_backends,  # noqa: F4
                        probe_backend, register_backend, resolve_backend,
                        use_backend)
 from .dispatch import (DispatchTable, calibrate_dispatch,  # noqa: F401
-                       calibrate_short_wide_ratio, default_table)
+                       calibrate_overlap, calibrate_short_wide_ratio,
+                       calibrated_network, default_table,
+                       overlap_efficiency_from_times)

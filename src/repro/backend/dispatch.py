@@ -275,3 +275,156 @@ def calibrate_dispatch(
         cache.put_dispatch(spec, table)
         cache.save()
     return table
+
+
+# ---------------------------------------------------------------------------
+# Overlap calibration: measure the realized ring-pipeline overlap efficiency
+# (DESIGN.md §10) and persist it next to the dispatch crossovers.
+# ---------------------------------------------------------------------------
+
+# The measurement child: a multi-device run (forced host devices, same
+# subprocess-env helper the fig4 legs use) timing four legs on the smoke
+# shape — the serial and K-chunk ring matvec schedules, plus the full- and
+# 1/K-payload ring collectives in isolation.  Four numbers pin the one
+# unknown in the pipeline cost model (see overlap_efficiency_from_times).
+_OVERLAP_MEASURE_CODE = r"""
+import json
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import FFTMatvec, random_block_column
+from repro.core.pipeline import Stage, run_stages
+from repro.core.timing import time_callable
+from repro.jax_compat import make_mesh, shard_map
+
+K = %(chunks)d
+n_dev = %(devices)d
+assert jax.device_count() == n_dev, jax.device_count()
+Nt, Nd, Nm = 32, 256, n_dev * 64
+mesh = make_mesh((1, n_dev), ("row", "col"))
+F_col = random_block_column(jax.random.PRNGKey(0), Nt, Nd, Nm,
+                            dtype=jnp.float64)
+m = jax.random.normal(jax.random.PRNGKey(1), (Nm, Nt), dtype=jnp.float64)
+base = FFTMatvec.from_block_column(F_col, mesh=mesh, collective="ring")
+res = {}
+for tag, ov in [("t_serial", None), ("t_pipelined", K)]:
+    op = base.with_overlap(ov)
+    mv = jax.jit(op.matvec, in_shardings=op.m_sharding())
+    ms = jax.device_put(m, op.m_sharding())
+    res[tag] = time_callable(lambda _: mv(ms), None, repeats=%(reps)d,
+                             warmup=2, mode="latency")
+opts = op.opts.resolve()
+st = Stage("psum", "d", axis="col", collective="ring", groups=(n_dev,))
+for tag, rows in [("t_collective", Nd),
+                  ("t_chunk_collective", (Nd + K - 1) // K)]:
+    f = shard_map(lambda q: run_stages((st,), q, {}, N_t=Nt, opts=opts),
+                  mesh=mesh, in_specs=P(), out_specs=P())
+    g = jax.jit(f)
+    q = jax.random.normal(jax.random.PRNGKey(2), (rows, Nt),
+                          dtype=jnp.float64)
+    res[tag] = time_callable(lambda _: g(q), None, repeats=%(reps)d,
+                             warmup=2, mode="latency")
+print(json.dumps(res))
+"""
+
+
+def _default_overlap_measure(spec: BackendSpec, *, devices: int = 8,
+                             repeats: int = 5):
+    """Measure the four overlap legs in a forced-host-devices subprocess
+    (the main process usually sees one device).  Returns
+    ``measure(chunks) -> {leg: seconds}``."""
+    import json
+    import subprocess
+    import sys
+
+    from repro.jax_compat import forced_host_devices_env
+
+    def measure(chunks: int) -> dict:
+        code = _OVERLAP_MEASURE_CODE % {"chunks": chunks,
+                                        "devices": devices,
+                                        "reps": repeats}
+        proc = subprocess.run([sys.executable, "-c", code],
+                              capture_output=True, text=True,
+                              env=forced_host_devices_env(devices))
+        if proc.returncode:
+            raise RuntimeError(
+                f"overlap calibration child failed:\n{proc.stderr}")
+        return json.loads(proc.stdout.strip().splitlines()[-1])
+
+    return measure
+
+
+def overlap_efficiency_from_times(times: dict, chunks: int) -> float:
+    """Realized overlap efficiency from the four measured legs.
+
+    The pipeline model prices the K-chunk schedule as the serial compute
+    plus ``t_chunk * (1 + (1-eff)(K-1))`` of exposed reduction, while the
+    serial schedule pays the full ``t_collective`` unhidden.  Subtracting
+    the two matvec legs cancels the (identical, row-partition-exact)
+    compute, so the *exposed* reduction time of the pipelined schedule is
+
+        exposed = t_pipelined - t_serial + t_collective
+
+    and solving the model for the hidden fraction gives
+
+        eff = 1 - (exposed / t_chunk_collective - 1) / (K - 1)
+
+    clamped to [0, 1]: noise can push the raw estimate past either end
+    (a pipelined run faster than perfect overlap predicts, or slower
+    than zero overlap predicts), and the cost model only admits the
+    physical range."""
+    K = int(chunks)
+    if K <= 1:
+        return 0.0
+    t_chunk = max(float(times["t_chunk_collective"]), 1e-12)
+    exposed = (float(times["t_pipelined"]) - float(times["t_serial"])
+               + float(times["t_collective"]))
+    eff = 1.0 - (exposed / t_chunk - 1.0) / (K - 1)
+    return min(1.0, max(0.0, eff))
+
+
+def calibrate_overlap(spec: BackendSpec, *,
+                      measure: Optional[Callable[[int], dict]] = None,
+                      cache=None, chunks: int = 4, devices: int = 8,
+                      repeats: int = 5) -> float:
+    """Measured overlap efficiency for ``spec``'s fabric, in [0, 1].
+
+    Mirrors :func:`calibrate_dispatch`: when ``cache`` (a
+    :class:`repro.tune.TuningCache`) is given, an efficiency previously
+    measured for the same backend fingerprint is returned without
+    re-measuring, and a fresh measurement is persisted (with its raw leg
+    times) for the next process.  ``measure(chunks) -> {leg: seconds}``
+    is injectable exactly like the dispatch measures — the tests drive a
+    deterministic cost model through the real estimation path."""
+    if cache is not None:
+        entry = cache.get_overlap(spec)
+        if entry is not None:
+            return float(entry["efficiency"])
+    if measure is None:
+        measure = _default_overlap_measure(spec, devices=devices,
+                                           repeats=repeats)
+    times = measure(chunks)
+    eff = overlap_efficiency_from_times(times, chunks)
+    if cache is not None:
+        cache.put_overlap(spec, eff, chunks=chunks,
+                          times={k: float(v) for k, v in times.items()})
+        cache.save()
+    return eff
+
+
+def calibrated_network(spec: BackendSpec, cache=None, base=None):
+    """A :class:`repro.core.NetworkModel` with ``overlap_efficiency``
+    replaced by the persisted :func:`calibrate_overlap` measurement for
+    ``spec`` (``overlap_calibrated=True``), or ``base`` unchanged when
+    nothing is cached — the fixed 0.7 default survives only as the
+    uncalibrated fallback."""
+    from repro.core.partition import NetworkModel
+    if base is None:
+        base = NetworkModel()
+    entry = cache.get_overlap(spec) if cache is not None else None
+    if entry is None:
+        return base
+    return dataclasses.replace(base,
+                               overlap_efficiency=float(entry["efficiency"]),
+                               overlap_calibrated=True)

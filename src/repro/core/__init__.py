@@ -26,9 +26,9 @@ from .toeplitz import (dense_from_block_column, dense_matvec,  # noqa: F401
                        dense_rmatvec, fourier_block_column,
                        random_block_column, random_unrepresentable,
                        heat_equation_p2o)
-from .partition import (choose_grid, paper_grid, matvec_comm_time,  # noqa: F401
-                        hierarchical_collective_time, NetworkModel,
-                        TPU_POD_NETWORK)
+from .partition import (choose_grid, choose_chunks, paper_grid,  # noqa: F401
+                        matvec_comm_time, hierarchical_collective_time,
+                        NetworkModel, TPU_POD_NETWORK)
 from .error_model import (relative_error_bound, dominant_phase,  # noqa: F401
                           lattice_bounds, phase_factors)
 from .pareto import (ConfigRecord, measure_configs, pareto_front,  # noqa: F401

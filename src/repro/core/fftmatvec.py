@@ -231,8 +231,10 @@ class FFTMatvec:
                   collective: Optional[str] = None) -> "FFTMatvec":
         """Same operator with another communication precision and,
         optionally, another collective lowering (``"psum"`` /
-        ``"hierarchical"`` / ``"reduce_scatter"``).  ``comm_level=None``
-        restores the default (reductions at the reduce level)."""
+        ``"hierarchical"`` / ``"reduce_scatter"`` / ``"ring"`` — the last
+        is the explicit software-pipelined ppermute ring, DESIGN.md §10).
+        ``comm_level=None`` restores the default (reductions at the
+        reduce level)."""
         return dataclasses.replace(
             self, comm_level=comm_level,
             collective=self.collective if collective is None else collective)

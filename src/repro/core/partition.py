@@ -62,21 +62,40 @@ class NetworkModel:
                                      # §9) — 0 = no hiding (chunking only
                                      # adds latency trees), 1 = all but the
                                      # last chunk's reduction is free
+    overlap_calibrated: bool = False  # True when overlap_efficiency came
+                                      # from a persisted calibrate_overlap
+                                      # measurement rather than the 0.7
+                                      # default (backend.calibrated_network)
 
     def collective_cost(self, group: int, bytes_local: int,
-                        spans_tiers: bool, chunks: int = 1) -> float:
+                        spans_tiers: bool, chunks: int = 1,
+                        hide_s: float | None = None) -> float:
         """Tree/ring collective over ``group`` devices, ``bytes_local``
         payload per device: log2(g) latency hops + (g-1)/g bandwidth.
 
-        ``chunks > 1`` prices the *pipelined* schedule (DESIGN.md §9): the
-        payload splits into K chunk reductions of bytes/K — each still
+        ``chunks > 1`` prices the *pipelined* schedule (DESIGN.md §9/§10):
+        the payload splits into K chunk reductions of bytes/K — each still
         pays the FULL log2(g) latency tree (latency replicates per chunk,
-        only bandwidth divides) — and ``overlap_efficiency`` of every
-        chunk's cost except the last hides under the next chunk's
-        compute.  At ``overlap_efficiency = 0`` this is strictly worse
-        than the flat collective (K latency trees instead of one), which
-        is what makes the model honest: pipelining pays only when the
-        collective is bandwidth-dominated or the overlap is real.
+        only bandwidth divides) — and all but the last chunk's reduction
+        hides under the next chunk's compute::
+
+            cost = K * t_chunk - (K - 1) * hidden
+            hidden = overlap_efficiency * t_chunk            (unbounded)
+                   = min(eff * t_chunk, hide_s / K)          (bounded)
+
+        The unbounded form is the PR-8 formula rewritten (algebraically
+        identical to ``t_chunk * (1 + (1-eff)(K-1))``).  ``hide_s`` — the
+        super-stage's total local compute time — bounds the hiding by the
+        per-chunk compute window: a reduction cannot hide under less
+        compute than actually runs beside it.  The bound is what makes a
+        *calibrated* efficiency observable in grid selection: without it,
+        eff multiplies every candidate's cost by the same scalar and can
+        never change an argmin; with it, grids whose chunk reductions
+        outlast the compute window saturate while cheaper-per-chunk grids
+        keep hiding.  At ``overlap_efficiency = 0`` chunking is strictly
+        worse than the flat collective (K latency trees instead of one),
+        which is what keeps the model honest: pipelining pays only when
+        the collective is bandwidth-dominated or the overlap is real.
         """
         if group <= 1:
             return 0.0
@@ -85,8 +104,10 @@ class NetworkModel:
         chunks = max(1, chunks)
         t_chunk = (math.log2(group) * alpha
                    + bytes_local / chunks * (group - 1) / group / bw)
-        exposed = 1.0 + (1.0 - self.overlap_efficiency) * (chunks - 1)
-        return t_chunk * exposed
+        hidden = self.overlap_efficiency * t_chunk
+        if hide_s is not None:
+            hidden = min(hidden, hide_s / chunks)
+        return chunks * t_chunk - (chunks - 1) * hidden
 
 
 # TPU analogue: the fast domain is one ICI pod (256 chips) and grids go
@@ -97,24 +118,31 @@ TPU_POD_NETWORK = NetworkModel(devices_per_tier=256, flat_grid_max=256)
 
 def hierarchical_collective_time(p_r: int, p_c: int, bytes_local: int,
                                  net: NetworkModel = NetworkModel(),
-                                 chunks: int = 1) -> float:
+                                 chunks: int = 1,
+                                 hide_s: float | None = None) -> float:
     """Reduce (or broadcast) of a ``bytes_local`` buffer over all
     p = p_r*p_c devices, blocked by the grid: within rows (contiguous ->
     fast domain when p_c fits a tier) then across rows (slow tier).
     ``p_r = 1`` degenerates to the flat collective; ``chunks > 1`` prices
     the pipelined schedule (both tiers chunk together — the super-stage
     splits the *payload*, and every chunk runs the full staged
-    reduction)."""
+    reduction).  ``hide_s`` bounds each tier's hiding by the per-chunk
+    compute window (see :meth:`NetworkModel.collective_cost`); applying
+    the bound per tier can over-credit by up to one window when both
+    tiers saturate, an acceptable slack for an argmin heuristic that the
+    end-to-end calibrated efficiency absorbs."""
     row_spans = p_c > net.devices_per_tier
     cross_spans = p_r > 1 and (p_r * p_c) > net.devices_per_tier
-    return (net.collective_cost(p_c, bytes_local, row_spans, chunks)
-            + net.collective_cost(p_r, bytes_local, cross_spans, chunks))
+    return (net.collective_cost(p_c, bytes_local, row_spans, chunks, hide_s)
+            + net.collective_cost(p_r, bytes_local, cross_spans, chunks,
+                                  hide_s))
 
 
 def matvec_comm_time(p_r: int, p_c: int, N_t: int, N_d: int, N_m: int,
                      bytes_per_elem: int = 8,
                      net: NetworkModel = NetworkModel(),
-                     chunks: int = 1) -> float:
+                     chunks: int = 1,
+                     hide_s: float | None = None) -> float:
     """Modeled communication of one F matvec + one F* matvec.
 
     Models the paper's accounting: the *data-vector* collectives (F's
@@ -124,16 +152,20 @@ def matvec_comm_time(p_r: int, p_c: int, N_t: int, N_d: int, N_m: int,
     reduces parameter chunks over the p_r rows in F*; that term favors
     small p_r and is excluded from grid *selection* to match [44] §3.7 —
     see DESIGN.md §6 for the accounting.)  ``chunks`` prices the
-    pipelined-collective schedule under ``net.overlap_efficiency``."""
+    pipelined-collective schedule under ``net.overlap_efficiency``;
+    ``hide_s`` is the super-stage's local compute time bounding the
+    hiding (None = unbounded, the PR-8 formula)."""
     d_bytes = N_t * math.ceil(N_d / p_r) * bytes_per_elem
     # F: phase-5 reduce of d; F*: phase-1 broadcast of d (same structure)
-    return 2.0 * hierarchical_collective_time(p_r, p_c, d_bytes, net, chunks)
+    return 2.0 * hierarchical_collective_time(p_r, p_c, d_bytes, net, chunks,
+                                              hide_s)
 
 
 def choose_grid(p: int, N_t: int, N_d: int, N_m: int,
                 bytes_per_elem: int = 8,
                 net: NetworkModel = NetworkModel(),
-                chunks: int = 1) -> tuple[int, int]:
+                chunks: int = 1,
+                hide_s: float | None = None) -> tuple[int, int]:
     """Brute-force the divisor pairs of ``p`` for the cheapest modeled
     comm.  Rows are capped at N_d (a row without sensors does no work).
     Up to ``net.flat_grid_max`` devices the flat grid is returned outright
@@ -144,7 +176,11 @@ def choose_grid(p: int, N_t: int, N_d: int, N_m: int,
     the full log2 tree while bandwidth divides), so the modeled optimum
     under ``chunks > 1`` may legitimately prefer fewer slow-tier hops
     than the serial-schedule grid — selection stays honest rather than
-    pinned.
+    pinned.  ``hide_s`` (the super-stage's local compute window) bounds
+    the hiding per chunk; with it, a *calibrated*
+    ``net.overlap_efficiency`` (see ``backend.calibrate_overlap``) can
+    legitimately move the argmin — grids whose chunk reductions outlast
+    the compute window stop benefiting from a higher efficiency.
 
     Under the default :class:`NetworkModel` at ``chunks = 1`` this agrees
     with :func:`paper_grid` at every device count the paper reports
@@ -159,10 +195,33 @@ def choose_grid(p: int, N_t: int, N_d: int, N_m: int,
             continue
         p_c = p // p_r
         t = matvec_comm_time(p_r, p_c, N_t, N_d, N_m, bytes_per_elem, net,
-                             chunks)
+                             chunks, hide_s)
         if t < best_t - 1e-15:
             best, best_t = (p_r, p_c), t
     return best
+
+
+def choose_chunks(p_r: int, p_c: int, N_t: int, N_d: int, N_m: int,
+                  bytes_per_elem: int = 8,
+                  net: NetworkModel = NetworkModel(),
+                  max_chunks: int = 8,
+                  hide_s: float | None = None) -> int:
+    """Model-optimal pipeline depth K for a FIXED grid: the argmin of
+    :func:`matvec_comm_time` over ``chunks`` in 1..max_chunks.
+
+    This is where ``net.overlap_efficiency`` is decisive even without a
+    compute bound: at eff = 0 every extra chunk only adds a latency tree
+    (K* = 1), while a high measured efficiency pushes K toward the cap on
+    bandwidth-dominated collectives.  ``launch.mesh.fftmatvec_grid``
+    feeds it the calibrated network so the served schedule depth tracks
+    the fabric's *measured* overlap instead of the 0.7 default."""
+    best_k, best_t = 1, float("inf")
+    for k in range(1, max(1, max_chunks) + 1):
+        t = matvec_comm_time(p_r, p_c, N_t, N_d, N_m, bytes_per_elem, net,
+                             k, hide_s)
+        if t < best_t - 1e-15:
+            best_k, best_t = k, t
+    return best_k
 
 
 def paper_grid(p: int) -> tuple[int, int]:

@@ -57,8 +57,20 @@ STAGE_KINDS = ("pad", "fft", "reorder", "gemv", "ifft", "mask", "unpad",
 #   "reduce_scatter"  reduce-scatter + all-gather decomposition of the
 #                     flat all-reduce (bandwidth-optimal for large rows);
 #                     falls back to flat psum when the carrier's leading
-#                     dim does not tile over the group
-COLLECTIVE_KINDS = ("psum", "hierarchical", "reduce_scatter")
+#                     dim does not tile over the group (the fallback is
+#                     surfaced as ``collective:reduce_scatter:fallback``)
+#   "ring"            explicit ppermute ring over the minor axis (g-1
+#                     hops circulating the original partials) + a local
+#                     reduction in canonical origin-rank order — the
+#                     software-pipelined schedule (DESIGN.md §10): hop
+#                     granularity the chunked gemv_psum super-stage can
+#                     interleave with compute, with per-row accumulation
+#                     order independent of chunking (bit-exact vs the
+#                     serial plan).  Falls back to flat psum (surfaced as
+#                     ``collective:ring:fallback``) when the plan carries
+#                     no static group sizes — the ring permutation is a
+#                     trace-time constant.
+COLLECTIVE_KINDS = ("psum", "hierarchical", "reduce_scatter", "ring")
 
 
 # ---------------------------------------------------------------------------
@@ -337,6 +349,11 @@ def _collective_count(stage) -> int:
         # reduce-scatter + all-gather, plus one flat psum across the outer
         # tiers when the group spans several mesh axes
         return 2 + (1 if len(stage.axes) > 1 else 0)
+    if stage.collective == "ring":
+        # g-1 ppermute hops over the minor group, plus one flat psum
+        # across the outer tiers when the group spans several mesh axes
+        g = stage.groups[-1] if stage.groups else 1
+        return max(1, (g - 1) + (1 if len(stage.axes) > 1 else 0))
     return 1
 
 
@@ -350,6 +367,44 @@ def _reduce_scatter_all_reduce(q, axes):
     if len(axes) > 1:
         q = jax.lax.psum(q, axes[:-1])
     return jax.lax.all_gather(q, minor, axis=0, tiled=True)
+
+
+def _ring_all_reduce(q, axes, groups):
+    """All-reduce over the minor (fast) axis as an explicit ppermute ring:
+    g-1 hops circulate the ORIGINAL local partials around the ring, then
+    each device reduces the g collected parts locally in canonical
+    origin-rank order 0..g-1, with a flat psum across any outer tiers.
+
+    The canonical order is the invariant that keeps the chunked ring
+    schedule row-partition-exact against the serial one (DESIGN.md §10):
+    every row's sum runs over the same g contributions in the same rank
+    order no matter how the rows were chunked — a classic *segmented*
+    reduce-scatter ring would start each segment's accumulation at a
+    different rank, making the order depend on a row's position in the
+    buffer and breaking bit parity under re-chunking.  The price is
+    bandwidth — each hop carries the full payload, (g-1)x vs the
+    reduce-scatter ring's 2(g-1)/g — which is the right trade for the
+    paper's latency-bound ~0.8 MB data-vector collectives (and exactly
+    what ``calibrate_overlap`` measures rather than assumes)."""
+    minor = axes[-1]
+    g = groups[-1]
+    perm = [(i, (i + 1) % g) for i in range(g)]
+    parts, recv = [q], q
+    for _ in range(g - 1):
+        recv = jax.lax.ppermute(recv, minor, perm)
+        parts.append(recv)
+    # after s hops device i holds the partial that originated at rank
+    # (i - s) mod g; summing origins 0..g-1 needs part (idx - o) mod g
+    idx = jax.lax.axis_index(minor)
+    stacked = jnp.stack(parts)
+    acc = jax.lax.dynamic_index_in_dim(stacked, idx % g, axis=0,
+                                       keepdims=False)
+    for origin in range(1, g):
+        acc = acc + jax.lax.dynamic_index_in_dim(
+            stacked, (idx - origin) % g, axis=0, keepdims=False)
+    if len(axes) > 1:
+        acc = jax.lax.psum(acc, axes[:-1])
+    return acc
 
 
 def _psum(stage, x, operands, N_t, S, opts):
@@ -366,6 +421,7 @@ def _psum(stage, x, operands, N_t, S, opts):
     lead = (x[0] if isinstance(x, tuple) else x).shape[0]
     rs_ok = (stage.collective == "reduce_scatter"
              and minor_group is not None and lead % minor_group == 0)
+    ring_ok = stage.collective == "ring" and minor_group is not None
 
     def reduce_one(p):
         carrier_dt = p.dtype
@@ -377,14 +433,22 @@ def _psum(stage, x, operands, N_t, S, opts):
                 q = jax.lax.psum(q, ax)
         elif rs_ok:
             q = _reduce_scatter_all_reduce(q, axes)
+        elif ring_ok:
+            q = _ring_all_reduce(q, axes, stage.groups)
         else:
             q = jax.lax.psum(q, axes)
         return q.astype(carrier_dt)
 
-    n_coll = _collective_count(stage) \
-        if stage.collective != "reduce_scatter" or rs_ok else 1
+    # a requested decomposition the carrier/plan cannot satisfy runs the
+    # flat psum instead — and SAYS so: a mis-sized grid must be visible
+    # in the instrumentation, not just silently slower
+    fallback = ((stage.collective == "reduce_scatter" and not rs_ok)
+                or (stage.collective == "ring" and not ring_ok))
+    key = (f"collective:{stage.collective}:fallback" if fallback
+           else f"collective:{stage.collective}")
+    n_coll = 1 if fallback else _collective_count(stage)
     for counter in _active_counters:
-        counter[f"collective:{stage.collective}"] += n_coll
+        counter[key] += n_coll
     if isinstance(x, tuple):
         return tuple(reduce_one(p) for p in x)
     return reduce_one(x)
@@ -424,35 +488,25 @@ def _chunk_bounds(rows: int, K: int):
 def _assemble_chunks(pieces, rows: int, S: int):
     """Stitch per-chunk outputs back into the serial row order.
 
-    Buffer reuse (the plan-lowering side of DESIGN.md §9's donation rule):
-    chunks write into ONE preallocated output via in-place dynamic
-    updates, which XLA aliases instead of materializing a concatenate
-    copy of every chunk buffer."""
+    Buffer reuse (the plan-lowering side of DESIGN.md §10's donation
+    rule): chunks are joined with ONE ``concatenate`` per carrier plane.
+    The earlier zeros + ``dynamic_update_slice`` chain paid a dead
+    zero-fill of the full output (every row is overwritten by exactly one
+    chunk) and serialized K dependent updates; a single concatenate has
+    no fill to elide, gives XLA one fusible producer per plane, and still
+    aliases into the donated output buffer under ``jitted(donate=...)``."""
+    if len(pieces) == 1:
+        return pieces[0]
     if isinstance(pieces[0], tuple):
         # plane-pair carrier: rows live on axis 1 (TOSI layout)
-        planes = []
-        for p in range(len(pieces[0])):
-            tmpl = pieces[0][p]
-            buf = jnp.zeros(tmpl.shape[:1] + (rows,) + tmpl.shape[2:],
-                            tmpl.dtype)
-            start = 0
-            for piece in pieces:
-                idx = (0, start) + (0,) * (piece[p].ndim - 2)
-                buf = jax.lax.dynamic_update_slice(buf, piece[p], idx)
-                start += piece[p].shape[1]
-            planes.append(buf)
-        return tuple(planes)
+        return tuple(
+            jnp.concatenate([piece[p] for piece in pieces], axis=1)
+            for p in range(len(pieces[0])))
     # flat time-domain carrier (S*rows_chunk, T): the stacked layout is
-    # S-major, so chunk rows interleave — write through an (S, rows, T) view
+    # S-major, so chunk rows interleave — join through an (S, rows, T) view
     T = pieces[0].shape[-1]
-    buf = jnp.zeros((S, rows, T), pieces[0].dtype)
-    start = 0
-    for piece in pieces:
-        mc = piece.shape[0] // S
-        buf = jax.lax.dynamic_update_slice(buf, piece.reshape(S, mc, T),
-                                           (0, start, 0))
-        start += mc
-    return buf.reshape(S * rows, T)
+    parts = [piece.reshape(S, piece.shape[0] // S, T) for piece in pieces]
+    return jnp.concatenate(parts, axis=1).reshape(S * rows, T)
 
 
 def _gemv_psum(stage, x, operands, N_t, S, opts):
@@ -473,16 +527,41 @@ def _gemv_psum(stage, x, operands, N_t, S, opts):
         # instrumentation (gemv/psum/collective:* counts) matches the
         # unpipelined plan stage for stage
         return run_stages(sub, x, operands, N_t=N_t, opts=opts, S=S)
+    explicit = stage.collective == "ring"
+    label = "ring" if explicit else "pipelined"
     for counter in _active_counters:
-        counter[f"collective:pipelined:{K}"] += 1
+        counter[f"collective:{label}:{K}"] += 1
+    compute, reduction = sub[:-1], sub[-1:]
     pieces = []
+    pending = None       # double-buffered slot: chunk k-1's unreduced carrier
     for start, size in _chunk_bounds(rows, K):
         chunk_ops = dict(operands)
         chunk_ops[stage.operand] = (
             jax.lax.slice_in_dim(A_re, start, start + size, axis=axis),
             jax.lax.slice_in_dim(A_im, start, start + size, axis=axis))
-        pieces.append(run_stages(sub, x, chunk_ops, N_t=N_t, opts=opts,
-                                 S=S))
+        if not explicit:
+            # PR-8 schedule: issue each chunk's collective inline and rely
+            # on XLA's async all-reduce to overlap it with the next gemv
+            pieces.append(run_stages(sub, x, chunk_ops, N_t=N_t, opts=opts,
+                                     S=S))
+            continue
+        # explicit software pipeline (DESIGN.md §10): run ONLY the compute
+        # stages for this chunk, then drain the PREVIOUS chunk's deferred
+        # ring reduction — program order inside shard_map pins chunk k's
+        # ppermute hops between chunk k's and k+1's gemv issue, so an
+        # in-order executor overlaps them by construction instead of by
+        # scheduler luck.  The slot is double-buffered: at most one
+        # unreduced carrier is live alongside the chunk being computed.
+        produced = run_stages(compute, x, chunk_ops, N_t=N_t, opts=opts,
+                              S=S)
+        if pending is not None:
+            pieces.append(run_stages(reduction, pending, operands,
+                                     N_t=N_t, opts=opts, S=S))
+        pending = produced
+    if pending is not None:
+        # the last chunk's reduction has nothing left to hide behind
+        pieces.append(run_stages(reduction, pending, operands,
+                                 N_t=N_t, opts=opts, S=S))
     return _assemble_chunks(pieces, rows, S)
 
 

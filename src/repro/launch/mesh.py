@@ -37,7 +37,8 @@ def make_test_mesh(shape=(2, 4), axes=("data", "model")):
 
 
 def fftmatvec_grid(mesh, *, N_t: int = 1000, N_d: int = 100,
-                   n_m_per_device: int = 5000, net=None, chunks: int = 1):
+                   n_m_per_device: int = 5000, net=None, chunks: int = 1,
+                   hide_s=None, spec=None, cache=None):
     """Map a mesh onto FFTMatvec's 2-D (row, col) grid — the same comm
     model :func:`repro.core.choose_grid` brute-forces, restricted to the
     grids this mesh can realize.
@@ -53,10 +54,23 @@ def fftmatvec_grid(mesh, *, N_t: int = 1000, N_d: int = 100,
     weak-scaled paper workload (N_m = 5000 per device).  ``chunks``
     prices every candidate split under the pipelined-collective schedule
     (``net.overlap_efficiency``, DESIGN.md §9) so a mesh laid out for a
-    pipelined run is costed with the schedule it will execute.  Returns
-    ``(row_axes, col_axes)`` name tuples (row may be empty)."""
+    pipelined run is costed with the schedule it will execute, and
+    ``hide_s`` (the super-stage's local compute window, seconds) bounds
+    the hiding per chunk (DESIGN.md §10).
+
+    When ``cache`` (a :class:`repro.tune.TuningCache`) is given, the
+    model's ``overlap_efficiency`` comes from the persisted
+    ``calibrate_overlap`` measurement for ``spec`` (default: the
+    session's resolved backend) via
+    :func:`repro.backend.calibrated_network` — the fixed 0.7 default is
+    only the uncalibrated fallback.  Returns ``(row_axes, col_axes)``
+    name tuples (row may be empty)."""
     from repro.core import TPU_POD_NETWORK, matvec_comm_time
     net = net or TPU_POD_NETWORK
+    if cache is not None:
+        from repro.backend import calibrated_network, resolve_backend
+        net = calibrated_network(spec or resolve_backend(None), cache,
+                                 base=net)
     sizes = mesh.devices.shape
     axes = tuple(mesh.axis_names)
     p = math.prod(sizes)
@@ -69,7 +83,7 @@ def fftmatvec_grid(mesh, *, N_t: int = 1000, N_d: int = 100,
         if p_r > min(p, N_d):           # a row without sensors does no work
             break
         t = matvec_comm_time(p_r, p // p_r, N_t, N_d, N_m, net=net,
-                             chunks=chunks)
+                             chunks=chunks, hide_s=hide_s)
         if t < best_t - 1e-15:
             best, best_t = k, t
     return axes[:best], axes[best:]

@@ -98,6 +98,11 @@ class CacheKey:
             # config's measured TIME but not its error — timings cached
             # under one schedule must not answer a query for another
             detail += f";ov={r.overlap}"
+        coll = getattr(op, "collective", None)
+        if coll is not None:
+            # an explicit collective override (e.g. "ring", DESIGN.md §10)
+            # changes the reduction schedule and hence the measured time
+            detail += f";coll={coll}"
         if variant in ("matmat", "rmatmat"):
             detail += f";S={n_rhs}"
         if tiles is not None:
@@ -181,6 +186,13 @@ class TuningCache:
             return (isinstance(entry, dict)
                     and entry.get("version") == SCHEMA_VERSION
                     and isinstance(entry.get("table"), dict))
+        if key.startswith("overlap/"):
+            try:
+                return (isinstance(entry, dict)
+                        and entry.get("version") == SCHEMA_VERSION
+                        and 0.0 <= float(entry["efficiency"]) <= 1.0)
+            except (KeyError, TypeError, ValueError):
+                return False
         return _valid_entry(entry)
 
     def save(self) -> None:
@@ -288,6 +300,48 @@ class TuningCache:
             "version": SCHEMA_VERSION,
             "backend": spec.fingerprint(),
             "table": table.to_dict(),
+        }
+
+    # -- overlap calibration -------------------------------------------------
+    # Measured overlap efficiencies (repro.backend.calibrate_overlap) live
+    # next to the dispatch crossovers, keyed by the same backend
+    # fingerprint: the realized fraction of a chunk's ring reduction the
+    # neighboring chunk's compute hides is a fabric property, measured
+    # once per backend and fed into NetworkModel.overlap_efficiency
+    # (DESIGN.md §10).
+
+    @staticmethod
+    def _overlap_key(spec) -> str:
+        return f"overlap/{spec.fingerprint()}"
+
+    def get_overlap(self, spec) -> Optional[dict]:
+        """Persisted overlap-calibration entry for this backend —
+        ``{"efficiency": float in [0, 1], "chunks": int, "times": {...}}``
+        — or None (miss/stale/corrupt reads as uncalibrated)."""
+        entry = self._load().get(self._overlap_key(spec))
+        if not isinstance(entry, dict) \
+                or entry.get("version") != SCHEMA_VERSION:
+            return None
+        try:
+            eff = float(entry["efficiency"])
+        except (KeyError, TypeError, ValueError):
+            return None
+        if not 0.0 <= eff <= 1.0:
+            return None
+        return entry
+
+    def put_overlap(self, spec, efficiency: float, *, chunks: int,
+                    times: Optional[dict] = None) -> None:
+        eff = float(efficiency)
+        if not 0.0 <= eff <= 1.0:
+            raise ValueError(f"overlap efficiency {eff} outside [0, 1]")
+        self._load()[self._overlap_key(spec)] = {
+            "version": SCHEMA_VERSION,
+            "backend": spec.fingerprint(),
+            "efficiency": eff,
+            "chunks": int(chunks),
+            "times": {} if times is None else {k: float(v)
+                                               for k, v in times.items()},
         }
 
     def lookup_config(self, key: CacheKey,

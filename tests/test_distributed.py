@@ -331,6 +331,101 @@ print(json.dumps(res))
     assert res["auto_keys"] and res["auto_keys"][0].split(":")[-1] != "1"
 
 
+def test_ring_overlap_parity_subprocess():
+    """The explicit software-pipelined ring schedule (DESIGN.md §10) on a
+    real 2x4 mesh: BITWISE parity against its serial plan in both
+    directions (canonical-origin-order invariant), exact agreement with
+    the PR-8 pipelined schedule, and the ring hops observable in the
+    instrumentation."""
+    res = _run(r"""
+import jax, json
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.core import (FFTMatvec, dense_matvec, dense_rmatvec,
+                        random_block_column, record_stages, rel_l2)
+from repro.jax_compat import make_mesh
+Nt, Nd, Nm, S = 16, 64, 128, 3
+F_col = random_block_column(jax.random.PRNGKey(0), Nt, Nd, Nm, dtype=jnp.float64)
+m = jax.random.normal(jax.random.PRNGKey(1), (Nm, Nt), dtype=jnp.float64)
+d = jax.random.normal(jax.random.PRNGKey(2), (Nd, Nt), dtype=jnp.float64)
+M = jax.random.normal(jax.random.PRNGKey(3), (Nm, Nt, S), dtype=jnp.float64)
+mesh = make_mesh((2, 4), ("row", "col"))
+base = FFTMatvec.from_block_column(F_col, mesh=mesh, collective="ring")
+ring, ser = base.with_overlap(4), base.with_overlap(None)
+def counts_of(fn, v, sh):
+    with record_stages() as c:
+        out = fn(jax.device_put(v, sh))
+    return out, dict(c)
+y_r, c_r = counts_of(ring.matvec, m, ring.m_sharding())
+y_s, c_s = counts_of(ser.matvec, m, ser.m_sharding())
+res = {"c_ring": c_r, "c_ser": c_s,
+       "bit_mv": bool(jnp.array_equal(y_r, y_s)),
+       "e_dense": rel_l2(y_r, dense_matvec(F_col, m))}
+r_r = ring.rmatvec(jax.device_put(d, ring.d_sharding()))
+r_s = ser.rmatvec(jax.device_put(d, ser.d_sharding()))
+res["bit_rmv"] = bool(jnp.array_equal(r_r, r_s))
+res["e_rmv"] = rel_l2(r_r, dense_rmatvec(F_col, d))
+res["bit_mm"] = bool(jnp.array_equal(
+    ring.matmat(jax.device_put(M, ring.m_sharding(stacked=True))),
+    ser.matmat(jax.device_put(M, ser.m_sharding(stacked=True)))))
+# vs the PR-8 pipelined (XLA-scheduled) form: same chunking, same math
+pipe = FFTMatvec.from_block_column(F_col, mesh=mesh).with_overlap(4)
+res["par_vs_pipelined"] = rel_l2(
+    y_r, pipe.matvec(jax.device_put(m, pipe.m_sharding())))
+# auto overlap keeps the ring schedule: the counter key carries the kind
+with record_stages() as ca:
+    base.matvec(jax.device_put(m, base.m_sharding()))
+res["auto_keys"] = sorted(k for k in dict(ca)
+                          if k.startswith("collective:ring:"))
+print(json.dumps(res))
+""")
+    # K=4 chunks x (g-1)=3 ppermute hops over the 4-device col group; the
+    # explicit schedule defers each chunk's reduction behind the next gemv
+    assert res["c_ring"]["gemv_psum"] == 1
+    assert res["c_ring"]["collective:ring:4"] == 1
+    assert res["c_ring"]["collective:ring"] == 12
+    assert res["c_ring"]["psum"] == 4 and res["c_ring"]["gemv"] == 4
+    # serial ring: one reduction, 3 hops, no pipeline counter
+    assert res["c_ser"]["psum"] == 1
+    assert res["c_ser"]["collective:ring"] == 3
+    assert not any(k.startswith("collective:ring:4") for k in res["c_ser"])
+    assert not any(k.endswith(":fallback") for k in res["c_ring"])
+    # bit-exact against serial (not merely roundoff agreement)
+    assert res["bit_mv"] and res["bit_rmv"] and res["bit_mm"]
+    assert res["e_dense"] < 1e-13 and res["e_rmv"] < 1e-13
+    assert res["par_vs_pipelined"] < 1e-15
+    # auto mode engaged the ring schedule at depth > 1 on its own
+    assert res["auto_keys"] and res["auto_keys"][0].split(":")[-1] != "1"
+
+
+def test_calibrate_overlap_real_measure_roundtrip(tmp_path):
+    """The real calibration path end to end: the forced-host-devices
+    measurement child runs the four ring legs, the efficiency lands in
+    the cache under the backend fingerprint, a fresh cache instance
+    reloads it without re-measuring, and the calibrated NetworkModel
+    carries it."""
+    from repro.backend import (calibrate_overlap, calibrated_network,
+                               resolve_backend)
+    from repro.tune import TuningCache
+
+    spec = resolve_backend(None)
+    cache = TuningCache(tmp_path / "tune.json")
+    eff = calibrate_overlap(spec, cache=cache, chunks=4, devices=8,
+                            repeats=3)
+    assert 0.0 <= eff <= 1.0
+    entry = cache.get_overlap(spec)
+    assert entry["efficiency"] == eff and entry["chunks"] == 4
+    assert set(entry["times"]) == {"t_serial", "t_pipelined",
+                                   "t_collective", "t_chunk_collective"}
+
+    def boom(chunks):
+        raise AssertionError("persisted calibration must not re-measure")
+    fresh = TuningCache(cache.path)
+    assert calibrate_overlap(spec, measure=boom, cache=fresh) == eff
+    net = calibrated_network(spec, fresh)
+    assert net.overlap_calibrated and net.overlap_efficiency == eff
+
+
 def test_pipelined_declines_at_thin_shapes_subprocess():
     """Auto overlap must decline (K = 1, serial counters intact) when the
     local contraction is too thin to chunk — the existing distributed
@@ -551,3 +646,33 @@ def test_fftmatvec_grid_threads_chunks():
     multi = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
     rows, cols = fftmatvec_grid(multi, chunks=4)
     assert tuple(rows) + tuple(cols) == ("pod", "data", "model")
+
+
+def test_fftmatvec_grid_consumes_calibrated_overlap(tmp_path):
+    """The launch-layer end of the calibration loop: handing
+    fftmatvec_grid a TuningCache routes the persisted measured efficiency
+    into the network model it prices splits with — equivalent to passing
+    the calibrated model explicitly, and distinct from the stale default
+    at constants where the bounded overlap term flips the split."""
+    from repro.backend import XLA_REF, calibrated_network
+    from repro.launch.mesh import fftmatvec_grid
+    from repro.tune import TuningCache
+
+    cache = TuningCache(tmp_path / "tune.json")
+    cache.put_overlap(XLA_REF, 0.95, chunks=2)
+    cache.save()
+    # constants where eff 0.7 vs 0.95 picks a different row split under
+    # the compute-bounded overlap term (mirrors the choose_grid flip
+    # test in tests/test_overlap.py, restricted to mesh-realizable grids)
+    net = NetworkModel(devices_per_tier=256, flat_grid_max=256,
+                       alpha_intra=8e-7, alpha_inter=1.3e-5,
+                       bw_intra=2.7e10, bw_inter=2.7e9)
+    mesh = _fake_mesh((4, 2, 128), ("outer", "pod", "model"))
+    kw = dict(N_t=1000, N_d=100, n_m_per_device=5000, chunks=2,
+              hide_s=9e-5)
+    stale = fftmatvec_grid(mesh, net=net, **kw)
+    cal = fftmatvec_grid(mesh, net=net, spec=XLA_REF, cache=cache, **kw)
+    assert cal == fftmatvec_grid(
+        mesh, net=calibrated_network(XLA_REF, cache, base=net), **kw)
+    assert stale == (("outer", "pod"), ("model",))
+    assert cal == (("outer",), ("pod", "model"))

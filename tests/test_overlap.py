@@ -1,9 +1,11 @@
-"""Pipelined-collective plan and policy tests (DESIGN.md §9).
+"""Pipelined-collective plan and policy tests (DESIGN.md §9/§10).
 
 Single-device, trace-free where possible: ``gemv_psum`` plan emission,
 ``ExecOpts.overlap`` validation, stage censuses, the auto-chunking
-dispatch policy, and tuning-cache key identity.  The multi-device
-bit-parity of the pipelined schedule (chunked vs serial on an 8-device
+dispatch policy, the explicit ring collective's semantics (driven under
+``vmap`` with bound axis names), the overlap-efficiency calibration
+round-trip, and tuning-cache key identity.  The multi-device bit-parity
+of the pipelined and ring schedules (chunked vs serial on an 8-device
 mesh) lives in ``tests/test_distributed.py``.
 """
 
@@ -11,11 +13,15 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.backend import DispatchTable, XLA_REF, default_table
-from repro.core import (ExecOpts, FFTMatvec, PrecisionConfig, Stage,
-                        TileMap, gram_plan, matvec_plan,
-                        random_block_column, stage_counts)
+from repro.backend import (DispatchTable, XLA_REF, calibrate_overlap,
+                           calibrated_network, default_table,
+                           overlap_efficiency_from_times)
+from repro.core import (COLLECTIVE_KINDS, ExecOpts, FFTMatvec, NetworkModel,
+                        PrecisionConfig, Stage, TileMap, choose_chunks,
+                        choose_grid, gram_plan, matvec_plan,
+                        random_block_column, record_stages, stage_counts)
 from repro.core import pipeline
+from repro.tune import TuningCache
 from repro.tune.cache import CacheKey
 
 CFG = PrecisionConfig()
@@ -230,3 +236,319 @@ def test_backend_specs_declare_overlap_depth():
     assert XLA_REF.overlap_chunks >= 1
     assert default_table(XLA_REF).overlap_chunks(
         4096, 8, XLA_REF, prefer="auto") >= 1
+
+
+# ---------------------------------------------------------------------------
+# The explicit ring collective (DESIGN.md §10), driven under vmap with
+# bound axis names — single-process semantics; real-mesh parity is in
+# tests/test_distributed.py
+# ---------------------------------------------------------------------------
+
+def _run_psum_stage(stage, x, n_t=4):
+    opts = ExecOpts().resolve()
+    f = lambda v: pipeline.run_stages((stage,), v, {}, N_t=n_t, opts=opts)
+    for ax in stage.axes:              # bind outer axes first
+        f = jax.vmap(f, axis_name=ax)
+    return f(x)
+
+
+def test_ring_is_a_collective_kind():
+    assert "ring" in COLLECTIVE_KINDS
+    Stage("psum", "d", axis="col", collective="ring", groups=(4,))
+
+
+def test_ring_matches_psum_and_replicates():
+    """The ppermute ring all-reduce agrees with the flat psum to roundoff
+    (different accumulation order — not bitwise) and leaves every device
+    with the identical replicated result."""
+    st = Stage("psum", "d", axis="col", collective="ring", groups=(4,))
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 6, 4), jnp.float64)
+    with record_stages() as c:
+        out = _run_psum_stage(st, x)
+    ref = _run_psum_stage(Stage("psum", "d", axis="col"), x)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-14
+    for dev in range(1, 4):
+        assert jnp.array_equal(out[0], out[dev])
+    # g-1 = 3 ppermute hops per reduction, no fallback
+    assert c["collective:ring"] == 3
+    assert not any(k.endswith(":fallback") for k in c)
+
+
+def test_ring_chunked_is_bitwise_serial():
+    """The canonical-origin-order invariant: ring-reducing row chunks
+    separately and concatenating is BITWISE identical to ring-reducing the
+    whole buffer — a per-row accumulation order independent of row
+    position and chunking.  (A classic segmented reduce-scatter ring
+    breaks this: each segment's sum starts at a different rank.)"""
+    st = Stage("psum", "d", axis="col", collective="ring", groups=(4,))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 12, 4), jnp.float64)
+    whole = _run_psum_stage(st, x)
+    parts = [_run_psum_stage(st, x[:, s:s + n, :])
+             for s, n in pipeline._chunk_bounds(12, 3)]
+    assert jnp.array_equal(jnp.concatenate(parts, axis=1), whole)
+
+
+def test_ring_restores_carrier_dtype_after_reduced_comm():
+    """Ring at a reduced comm level: the s-level rounding is visible in
+    the value while the f64 carrier dtype survives (DESIGN.md §5)."""
+    st = Stage("psum", "s", axis="col", collective="ring", groups=(2,))
+    x = jnp.array([[1.0 + 2.0 ** -40], [1.0]], jnp.float64)[:, :, None]
+    out = _run_psum_stage(st, x)
+    assert out.dtype == jnp.float64
+    assert float(out[0, 0, 0]) == 2.0            # f32 comm dropped the bit
+    hi = _run_psum_stage(Stage("psum", "d", axis="col", collective="ring",
+                               groups=(2,)), x)
+    assert float(hi[0, 0, 0]) == 2.0 + 2.0 ** -40   # d comm keeps it
+
+
+def test_ring_outer_tier_psum():
+    """A multi-axis ring group rings the minor (fast) axis and flat-psums
+    the outer tiers: value correct, hop census g-1 + 1."""
+    st = Stage("psum", "d", axis=("row", "col"), collective="ring",
+               groups=(2, 4))
+    # the vmap helper binds stage.axes[-1] outermost: leading array axis
+    # is the minor ("col", group 4) ring axis, then "row" (2)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 2, 3, 4), jnp.float64)
+    with record_stages() as c:
+        out = _run_psum_stage(st, x)
+    ref = _run_psum_stage(Stage("psum", "d", axis=("row", "col")), x)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-14
+    assert c["collective:ring"] == 4             # 3 hops + 1 outer psum
+
+
+def test_ring_without_groups_falls_back_visibly():
+    """A ring stage with no static groups cannot build the trace-time
+    permutation — it must run the flat psum AND say so in the counters,
+    never silently."""
+    st = Stage("psum", "d", axis="col", collective="ring")
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 5, 4), jnp.float64)
+    with record_stages() as c:
+        out = _run_psum_stage(st, x)
+    ref = _run_psum_stage(Stage("psum", "d", axis="col"), x)
+    assert jnp.array_equal(out, ref)             # the flat psum, exactly
+    assert c["collective:ring:fallback"] == 1
+    assert "collective:ring" not in c
+
+
+def test_reduce_scatter_fallback_is_visible():
+    """Regression (DESIGN.md §10 satellite): a reduce_scatter whose
+    leading carrier dim does not tile over the minor group used to fall
+    back to the flat psum *silently* — the fallback now has its own
+    counter key so a mis-sized grid is observable, not just slower."""
+    # 5 rows over a group of 4: not tileable -> fallback
+    st = Stage("psum", "d", axis="col", collective="reduce_scatter",
+               groups=(4,))
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 5, 4), jnp.float64)
+    with record_stages() as c:
+        out = _run_psum_stage(st, x)
+    assert c["collective:reduce_scatter:fallback"] == 1
+    assert "collective:reduce_scatter" not in c
+    assert jnp.array_equal(out, _run_psum_stage(
+        Stage("psum", "d", axis="col"), x))
+    # 8 rows tile -> the decomposed path, counted under the normal key
+    x8 = jax.random.normal(jax.random.PRNGKey(5), (4, 8, 4), jnp.float64)
+    with record_stages() as c:
+        _run_psum_stage(st, x8)
+    assert c["collective:reduce_scatter"] == 2   # rs + all-gather
+    assert "collective:reduce_scatter:fallback" not in c
+
+
+# ---------------------------------------------------------------------------
+# Chunk assembly: concatenate, no zero-fill (DESIGN.md §10 micro-fix)
+# ---------------------------------------------------------------------------
+
+def test_assemble_chunks_plane_pair():
+    key = jax.random.PRNGKey(6)
+    planes = [tuple(jax.random.normal(jax.random.fold_in(key, 10 * i + p),
+                                      (3, n, 4), jnp.float64)
+                    for p in range(2))
+              for i, n in enumerate((3, 2, 2))]
+    out = pipeline._assemble_chunks(planes, 7, 1)
+    for p in range(2):
+        ref = jnp.concatenate([pl[p] for pl in planes], axis=1)
+        assert jnp.array_equal(out[p], ref)
+
+
+def test_assemble_chunks_flat_carrier_interleaves_rhs():
+    """The stacked (S*rows, T) layout is S-major: chunk rows interleave
+    through the (S, rows, T) view, exactly as the dynamic-update path
+    did."""
+    S, T = 3, 4
+    chunks = [jax.random.normal(jax.random.PRNGKey(7 + i), (S * n, T),
+                                jnp.float64)
+              for i, n in enumerate((2, 1, 2))]
+    out = pipeline._assemble_chunks(chunks, 5, S)
+    ref = jnp.concatenate(
+        [c.reshape(S, c.shape[0] // S, T) for c in chunks],
+        axis=1).reshape(S * 5, T)
+    assert jnp.array_equal(out, ref)
+
+
+def test_assemble_single_chunk_is_identity():
+    x = jnp.ones((4, 3))
+    assert pipeline._assemble_chunks([x], 4, 1) is x
+
+
+def test_assemble_chunks_emits_no_zero_fill():
+    """The micro-fix is observable in the jaxpr: assembly lowers to one
+    concatenate per plane with no broadcast-of-zeros buffer to overwrite."""
+    def assemble(a, b):
+        return pipeline._assemble_chunks([a, b], 8, 1)
+    jaxpr = jax.make_jaxpr(assemble)(jnp.ones((4, 3)), jnp.ones((4, 3)))
+    prims = {eqn.primitive.name for eqn in jaxpr.jaxpr.eqns}
+    assert "concatenate" in prims
+    # the old path materialized zeros (broadcast_in_dim) and overwrote
+    # them chunk by chunk (dynamic_update_slice) — both must be gone
+    assert prims <= {"concatenate", "reshape"}
+
+
+# ---------------------------------------------------------------------------
+# Overlap-efficiency calibration (DESIGN.md §10): estimator, cache
+# round-trip, and the model consuming the measured number
+# ---------------------------------------------------------------------------
+
+def _times(t_serial, t_pipelined, t_collective, t_chunk):
+    return {"t_serial": t_serial, "t_pipelined": t_pipelined,
+            "t_collective": t_collective, "t_chunk_collective": t_chunk}
+
+
+def test_overlap_efficiency_estimator_endpoints():
+    # perfect overlap: the pipelined run exposes ONE chunk reduction
+    assert overlap_efficiency_from_times(
+        _times(10.0, 10.0 - 4.0 + 1.0, 4.0, 1.0), 4) == 1.0
+    # zero overlap: all K chunk reductions stay exposed
+    assert overlap_efficiency_from_times(
+        _times(10.0, 10.0 - 4.0 + 4.0, 4.0, 1.0), 4) == 0.0
+    # halfway: exposed = t_chunk * (1 + 0.5 * (K-1))
+    assert overlap_efficiency_from_times(
+        _times(10.0, 10.0 - 4.0 + 2.5, 4.0, 1.0), 4) == pytest.approx(0.5)
+    # noise clamps to the physical range instead of leaking out of it
+    assert overlap_efficiency_from_times(
+        _times(10.0, 5.0, 4.0, 1.0), 4) == 1.0
+    assert overlap_efficiency_from_times(
+        _times(10.0, 20.0, 4.0, 1.0), 4) == 0.0
+    assert overlap_efficiency_from_times(_times(1, 1, 1, 1), 1) == 0.0
+
+
+def test_calibrate_overlap_persists_and_reloads(tmp_path):
+    calls = []
+
+    def measure(chunks):
+        calls.append(chunks)
+        # engineered to eff = 0.95 at K = 2
+        return _times(10.0, 10.0 - 1.8 + 1.05, 1.8, 1.0)
+
+    cache = TuningCache(tmp_path / "tune.json")
+    eff = calibrate_overlap(XLA_REF, measure=measure, cache=cache, chunks=2)
+    assert eff == pytest.approx(0.95)
+    assert calls == [2]
+    entry = cache.get_overlap(XLA_REF)
+    assert entry["efficiency"] == pytest.approx(0.95)
+    assert entry["chunks"] == 2 and "t_serial" in entry["times"]
+
+    # a FRESH cache instance (another process) reloads the measurement
+    # and never re-measures — the injected measure would record the call
+    def boom(chunks):
+        raise AssertionError("cache hit must not re-measure")
+    again = calibrate_overlap(XLA_REF, measure=boom,
+                              cache=TuningCache(cache.path))
+    assert again == pytest.approx(0.95)
+
+
+def test_calibrated_network_flags_and_falls_back(tmp_path):
+    cache = TuningCache(tmp_path / "tune.json")
+    base = NetworkModel()
+    # nothing persisted: the fixed default survives, explicitly uncalibrated
+    net = calibrated_network(XLA_REF, cache, base=base)
+    assert net is base and net.overlap_efficiency == 0.7
+    assert not net.overlap_calibrated
+    calibrate_overlap(XLA_REF, cache=cache, chunks=2,
+                      measure=lambda k: _times(10.0, 9.25, 1.8, 1.0))
+    net = calibrated_network(XLA_REF, TuningCache(cache.path), base=base)
+    assert net.overlap_calibrated
+    assert net.overlap_efficiency == pytest.approx(0.95)
+    # everything else is the base model, untouched
+    assert net.flat_grid_max == base.flat_grid_max
+
+
+def test_overlap_entries_survive_merge_on_write(tmp_path):
+    """Two processes calibrating different things against one file must
+    not drop each other's overlap entries (the _mergeable contract)."""
+    path = tmp_path / "tune.json"
+    a, b = TuningCache(path), TuningCache(path)
+    a.put_overlap(XLA_REF, 0.9, chunks=4)
+    a.save()
+    from repro.backend import CPU_XLA
+    b.put_overlap(CPU_XLA, 0.4, chunks=2)
+    b.save()                             # merge-on-write: a's entry survives
+    fresh = TuningCache(path)
+    assert fresh.get_overlap(XLA_REF)["efficiency"] == pytest.approx(0.9)
+    assert fresh.get_overlap(CPU_XLA)["efficiency"] == pytest.approx(0.4)
+
+
+def test_put_overlap_rejects_unphysical_efficiency(tmp_path):
+    cache = TuningCache(tmp_path / "tune.json")
+    for bad in (-0.1, 1.5):
+        with pytest.raises(ValueError, match="efficiency"):
+            cache.put_overlap(XLA_REF, bad, chunks=4)
+
+
+_FLIP_NET = dict(devices_per_tier=256, flat_grid_max=256,
+                 alpha_intra=8e-7, alpha_inter=1.3e-5,
+                 bw_intra=2.7e10, bw_inter=2.7e9)
+
+
+def test_choose_grid_moves_with_calibrated_efficiency(tmp_path):
+    """The closed model loop, observable: under the compute-bounded
+    overlap term (hide_s), a stale-default network and a calibrated one
+    pick DIFFERENT grids — the measured efficiency is consumed by grid
+    selection, not just stored."""
+    stale = NetworkModel(overlap_efficiency=0.7, **_FLIP_NET)
+    cache = TuningCache(tmp_path / "tune.json")
+    calibrate_overlap(XLA_REF, cache=cache, chunks=2,
+                      measure=lambda k: _times(10.0, 9.25, 1.8, 1.0))
+    calibrated = calibrated_network(XLA_REF, cache, base=stale)
+    assert calibrated.overlap_efficiency == pytest.approx(0.95)
+    args = (1024, 1000, 100, 5000 * 1024)
+    kw = dict(chunks=2, hide_s=9e-5)
+    g_stale = choose_grid(*args, net=stale, **kw)
+    g_cal = choose_grid(*args, net=calibrated, **kw)
+    assert g_stale == (8, 128) and g_cal == (4, 256)
+    # without the compute bound the efficiency is a common scalar and
+    # cannot move the argmin — hide_s is what makes calibration visible
+    assert choose_grid(*args, net=stale, chunks=2) \
+        == choose_grid(*args, net=calibrated, chunks=2)
+
+
+def test_choose_chunks_tracks_efficiency():
+    """Pipeline depth for a fixed grid: zero measured overlap pins the
+    serial schedule (every extra chunk only adds a latency tree); perfect
+    overlap pushes to the cap on the bandwidth-heavy shape."""
+    args = (8, 128, 1000, 100, 5000 * 1024)
+    assert choose_chunks(*args, net=NetworkModel(overlap_efficiency=0.0)) == 1
+    assert choose_chunks(*args, net=NetworkModel(overlap_efficiency=1.0),
+                         max_chunks=8) == 8
+
+
+def test_collective_cost_chunked_formula_unchanged_without_bound():
+    """hide_s=None reproduces the PR-8 formula exactly — the bound is an
+    extension, not a re-pricing of existing selections."""
+    net = NetworkModel(overlap_efficiency=0.6)
+    for K in (1, 2, 4, 8):
+        t_chunk = (jnp.log2(8) * net.alpha_intra
+                   + 8e5 / K * 7 / 8 / net.bw_intra)
+        legacy = float(t_chunk) * (1.0 + (1.0 - 0.6) * (K - 1))
+        assert net.collective_cost(8, 8e5, False, K) \
+            == pytest.approx(legacy, rel=1e-12)
+
+
+def test_cache_key_carries_the_collective_kind():
+    op = _tiny_op()
+    default = CacheKey.for_operator(op, ["d", "s"]).detail
+    assert ";coll=" not in default
+    import dataclasses
+    ring = dataclasses.replace(op, collective="ring")
+    ringed = CacheKey.for_operator(ring, ["d", "s"]).detail
+    assert ";coll=ring" in ringed
+    # a ring-schedule timing never answers a default-schedule query
+    assert default != ringed
