@@ -39,6 +39,32 @@ def _registry():
     }
 
 
+# plan families each figure's timed path lowers (repro.analysis.cli
+# names) — what `--lint` pre-flights before any timing starts
+_LINT_PLANS = {
+    "fig1": ("matvec",),
+    "fig2": ("matvec", "rmatvec"),
+    "fig3": ("matvec", "rmatvec"),
+    "fig4": ("matvec-hier", "matvec-ring", "rmatvec-ring"),
+    "fig5": ("matvec", "rmatvec"),
+    "fig6": ("gram", "gram-circulant"),
+    "hessian": ("gram", "gram-circulant", "gram-mesh"),
+}
+
+
+def _lint(selected, smoke: bool) -> int:
+    """Pre-flight: statically lint the plan families the selected
+    figures will lower — every registered backend, abstract tracing,
+    nothing executes — so a mis-declared plan fails in seconds instead
+    of after the GPU-hours it was about to be timed with."""
+    from repro.analysis import cli as analysis_cli
+
+    argv = ["--strict"] + (["--smoke"] if smoke else [])
+    for plan in sorted({p for name in selected for p in _LINT_PLANS[name]}):
+        argv += ["--plan", plan]
+    return analysis_cli.main(argv)
+
+
 def main(argv=None) -> None:
     benches = _registry()
     ap = argparse.ArgumentParser(description=__doc__)
@@ -46,6 +72,10 @@ def main(argv=None) -> None:
                     help=f"comma-separated subset of {sorted(benches)}")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CPU shapes for the CI smoke job")
+    ap.add_argument("--lint", action="store_true",
+                    help="pre-flight only: statically lint each selected "
+                         "figure's plan families (repro.analysis) and "
+                         "exit — no benchmark runs")
     args, passthrough = ap.parse_known_args(argv)
 
     selected = [s for s in args.only.split(",") if s] or list(benches)
@@ -54,6 +84,9 @@ def main(argv=None) -> None:
         ap.error(f"unknown bench(es) {unknown}; known: {sorted(benches)}")
     if passthrough and len(selected) != 1:
         ap.error(f"extra flags {passthrough} need --only <one bench>")
+
+    if args.lint:
+        raise SystemExit(_lint(selected, args.smoke))
 
     print("name,us_per_call,derived")
     child_argv = (["--smoke"] if args.smoke else []) + passthrough

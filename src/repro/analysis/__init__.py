@@ -1,0 +1,72 @@
+"""Static analysis of lowered plans and their jaxprs (DESIGN.md §11).
+
+Three pass families over a :class:`repro.core.pipeline.Plan`, all fully
+static — plans are traced abstractly via ``make_jaxpr`` on
+``ShapeDtypeStruct`` inputs and never executed:
+
+``precision-flow``   the declared dtype lattice (PrecisionConfig, comm
+                     levels, TileMap, carrier dtype) vs the traced one:
+                     silent output downgrades (the PR-5 bug class),
+                     stray non-weak f64 under x64, accumulators below
+                     the declared gemv level, footnote-8 reorder
+                     levels, tile/stage consistency.
+``invariants``       lowering shape: no zero-fill chunk assembly, no
+                     useless convert round trips, no device transfers,
+                     structurally valid collectives, surfaced
+                     fallbacks, Hamiltonian ppermute rings, carrier
+                     dtype restored after reduced-precision comm.
+``recompile``        jit static-argument hygiene: hashability, hash/eq
+                     stability, deterministic ``ExecOpts.resolve()`` —
+                     plus :func:`trace_stability`, the executed
+                     cross-check against the ``TimingHarness`` trace
+                     counters.
+
+Entry points: :func:`lint_plan` / :func:`assert_plan_clean` for plans,
+:func:`lint_operator` for FFTMatvec/Gram operators (both directions,
+mesh collectives included), :func:`lint_callable` for raw-jaxpr
+primitive checks, and ``python -m repro.analysis`` to sweep the
+paper-shape plan families across every registered backend.
+"""
+
+from typing import List, Optional
+
+from .context import PlanContext, float_level, iter_eqns, trace_callable
+from .findings import (ERROR, WARNING, Finding, PlanLintError, errors,
+                       format_findings)
+from .recompile import trace_stability
+from .rules import (FAMILIES, Rule, all_rules, assert_plan_clean,
+                    lint_callable, lint_plan, rule, rule_catalog)
+
+__all__ = [
+    "ERROR", "WARNING", "FAMILIES", "Finding", "PlanContext",
+    "PlanLintError", "Rule",
+    "all_rules", "assert_plan_clean", "errors", "float_level",
+    "format_findings", "iter_eqns", "lint_callable", "lint_operator",
+    "lint_plan", "rule", "rule_catalog", "trace_callable",
+    "trace_stability",
+]
+
+
+def lint_operator(op, *, adjoint: Optional[bool] = None,
+                  **kw) -> List[Finding]:
+    """Lint the plan(s) an operator actually executes.
+
+    ``op`` is an :class:`repro.core.FFTMatvec` (both directions by
+    default; pass ``adjoint=True/False`` for one) or a
+    :class:`repro.core.gram.GramOperator`.  Mesh operators lint the mesh
+    plan — collective stages, static groups and comm level included —
+    exactly as :meth:`plan` builds it for ``shard_map``.
+    """
+    dims = dict(N_t=op.N_t, N_d=op.N_d, N_m=op.N_m)
+    if hasattr(op, "rows"):                      # GramOperator
+        # circulant mode is single-device, so the square "G" operand's
+        # global row count IS the local one; exact mode infers local
+        # rows from the plan's collective groups
+        rows = op.rows if op.mode == "circulant" else None
+        return lint_plan(op.plan(), op.opts, rows=rows, **dims, **kw)
+    directions = (False, True) if adjoint is None else (adjoint,)
+    found: List[Finding] = []
+    for adj in directions:
+        found.extend(lint_plan(op.plan(adjoint=adj), op.opts,
+                               **dims, **kw))
+    return found

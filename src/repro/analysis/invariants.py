@@ -1,0 +1,256 @@
+"""Lowering-invariant rules: what a well-formed lowered plan looks like.
+
+These generalize the suite's one-off jaxpr assertions into declarative
+checks over the whole traced plan:
+
+* chunk assembly joins with ``concatenate`` — never the zeros +
+  ``dynamic_update_slice`` chain whose dead zero-fill PR 9 removed;
+* no useless ``convert_element_type`` chains (widening or same-width
+  round trips; *narrowing* round trips are the declared tile/comm
+  quantization idiom and exempt — see the precision-flow pass);
+* no device transfers inside a plan body (a ``device_put`` under jit is
+  a host round trip on the hot path);
+* collective stages are structurally valid (axes present, no
+  duplicates, positive static groups);
+* a requested collective decomposition that silently fell back to the
+  flat psum is surfaced (the executor's ``collective:<kind>:fallback``
+  counters, recorded while the abstract trace ran the stage loop);
+* ``ppermute`` permutations form a single Hamiltonian ring of the full
+  axis size — both the schedule builder
+  (:func:`repro.core.pipeline.ring_permutation`) and every traced
+  ``ppermute`` eqn are checked;
+* comm-precision reductions restore the carrier dtype (each collective
+  stage is re-traced in isolation on a carrier-level dummy: out dtype
+  must equal in dtype — DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import pipeline
+from repro.core import precision as prec
+
+from .context import DATA_KINDS, PlanContext, float_level
+from .findings import ERROR, WARNING, Finding
+from .rules import rule
+
+# the zero-fill chunk-assembly signature (PR 9 removed it: assembly is
+# ONE concatenate per carrier plane; see pipeline._assemble_chunks)
+ASSEMBLY_FORBIDDEN = ("dynamic_update_slice",)
+TRANSFER_PRIMS = ("device_put",)
+
+
+@rule("no-zero-fill-assembly", "invariants",
+      "plans never emit dynamic_update_slice — chunked outputs join "
+      "with one concatenate per carrier plane")
+def check_no_update_slice(ctx: PlanContext):
+    out = []
+    for eqn, _, path in ctx.eqns():
+        if eqn.primitive.name in ASSEMBLY_FORBIDDEN:
+            out.append(Finding(
+                "no-zero-fill-assembly", ERROR,
+                f"{eqn.primitive.name!r} emitted — the zeros + "
+                f"update-slice assembly pays a dead zero-fill and "
+                f"serializes the chunk writes (use concatenate)",
+                detail=path))
+    return out
+
+
+@rule("no-device-transfer", "invariants",
+      "no device transfers inside a plan body")
+def check_no_transfer(ctx: PlanContext):
+    out = []
+    for eqn, _, path in ctx.eqns():
+        if eqn.primitive.name in TRANSFER_PRIMS:
+            out.append(Finding(
+                "no-device-transfer", ERROR,
+                f"{eqn.primitive.name!r} inside the plan trace — a "
+                f"host/device round trip on the hot path",
+                detail=path))
+    return out
+
+
+@rule("convert-round-trip", "invariants",
+      "no widening or same-dtype convert_element_type round trips "
+      "(narrowing round trips are the quantization idiom and exempt)")
+def check_convert_round_trips(ctx: PlanContext):
+    out = []
+    for eqn, jaxpr, path in ctx.eqns():
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        src = eqn.invars[0]
+        producer = next((e for e in jaxpr.eqns if src in e.outvars), None)
+        if producer is None \
+                or producer.primitive.name != "convert_element_type":
+            continue
+        a = producer.invars[0].aval.dtype
+        b = src.aval.dtype
+        c = eqn.outvars[0].aval.dtype
+        la, lb = float_level(a), float_level(b)
+        if a == c and la is not None and lb is not None and lb < la:
+            continue        # narrowing round trip: a declared quantization
+        if a == c and b != a:
+            out.append(Finding(
+                "convert-round-trip", WARNING,
+                f"convert round trip {jnp.dtype(a).name} -> "
+                f"{jnp.dtype(b).name} -> {jnp.dtype(c).name} with no "
+                f"consumer between — two casts of pure memory traffic",
+                detail=path))
+        elif b == a:
+            out.append(Finding(
+                "convert-round-trip", WARNING,
+                f"no-op convert chain at {jnp.dtype(a).name}",
+                detail=path))
+    return out
+
+
+@rule("collective-stage-valid", "invariants",
+      "collective stages name non-duplicate axes with positive static "
+      "groups; comm levels only appear where they apply")
+def check_collective_stages(ctx: PlanContext):
+    out = []
+    for idx, s in ctx.stages("psum", "gemv_psum"):
+        axes = s.axes
+        if not axes:
+            out.append(Finding(
+                "collective-stage-valid", ERROR,
+                f"{s.kind} stage has no mesh axis to reduce over",
+                stage=idx))
+            continue
+        if len(set(axes)) != len(axes):
+            out.append(Finding(
+                "collective-stage-valid", ERROR,
+                f"duplicate mesh axes in collective axis tuple {axes}",
+                stage=idx))
+        if s.groups is not None and any(g < 1 for g in s.groups):
+            out.append(Finding(
+                "collective-stage-valid", ERROR,
+                f"non-positive static group size in {s.groups}",
+                stage=idx))
+        if s.collective in ("reduce_scatter", "ring") and s.groups is None:
+            out.append(Finding(
+                "collective-stage-valid", WARNING,
+                f"{s.collective!r} requested without static groups — "
+                f"the lowering cannot build its schedule and will fall "
+                f"back to the flat psum",
+                stage=idx))
+    for idx, s in ctx.stages(*DATA_KINDS):
+        if s.comm is not None:
+            out.append(Finding(
+                "collective-stage-valid", WARNING,
+                f"comm level set on a {s.kind!r} stage — only the "
+                f"gemv_psum super-stage consumes it",
+                stage=idx))
+    return out
+
+
+@rule("collective-fallback", "invariants",
+      "a requested reduce_scatter/ring decomposition that lowers to the "
+      "flat psum is surfaced, not silent")
+def check_collective_fallback(ctx: PlanContext):
+    # vmap batching rewrites collectives structurally (a traced ppermute
+    # becomes a gather), so the jaxpr carries no reliable signature —
+    # the executor's own fallback counters, recorded while the abstract
+    # trace ran the stage loop, are the ground truth (pipeline._psum).
+    wanted = {s.collective for _, s in ctx.stages("psum")
+              if s.collective in ("reduce_scatter", "ring")}
+    if not wanted:
+        return []
+    counters = ctx.trace_counters
+    out = []
+    for kind in sorted(wanted):
+        n = counters.get(f"collective:{kind}:fallback", 0)
+        if n:
+            out.append(Finding(
+                "collective-fallback", WARNING,
+                f"plan requests collective={kind!r} but {n} stage "
+                f"lowering(s) fell back to the flat psum (mis-sized "
+                f"grid or missing static groups) — see the "
+                f"'collective:{kind}:fallback' counter"))
+    return out
+
+
+def _ring_findings(perm: Sequence[Tuple[int, int]], g: int,
+                   where: str) -> list:
+    """Validate a ppermute permutation as one Hamiltonian ring over g
+    ranks: every rank appears exactly once as source and destination,
+    and the edges form a single cycle covering all g ranks."""
+    srcs = [s for s, _ in perm]
+    dsts = [d for _, d in perm]
+    bad = []
+    if sorted(srcs) != list(range(g)) or sorted(dsts) != list(range(g)):
+        bad.append(Finding(
+            "ring-permutation", ERROR,
+            f"permutation does not cover every rank of the {g}-group "
+            f"exactly once as source and destination — partials are "
+            f"dropped or double-counted",
+            detail=f"{where}: perm={list(perm)}"))
+        return bad
+    step = dict(perm)
+    seen, r = set(), 0
+    while r not in seen:
+        seen.add(r)
+        r = step[r]
+    if len(seen) != g:
+        bad.append(Finding(
+            "ring-permutation", ERROR,
+            f"permutation splits the {g}-group into disjoint cycles "
+            f"(visited {len(seen)} of {g} ranks from rank 0) — the ring "
+            f"reduction never sees the missing ranks' partials",
+            detail=f"{where}: perm={list(perm)}"))
+    return bad
+
+
+@rule("ring-permutation", "invariants",
+      "ppermute permutations form one Hamiltonian ring over the full "
+      "minor-axis group (schedule builder and traced eqns both)")
+def check_ring_permutation(ctx: PlanContext):
+    out = []
+    ring_stages = [(i, s) for i, s in ctx.stages("psum")
+                   if s.collective == "ring" and s.groups]
+    for idx, s in ring_stages:
+        g = s.groups[-1]
+        perm = pipeline.ring_permutation(g)
+        for f in _ring_findings(perm, g, f"ring_permutation({g})"):
+            out.append(Finding(f.rule, f.severity, f.message, stage=idx,
+                               detail=f.detail))
+    for eqn, _, path in ctx.eqns():
+        if eqn.primitive.name != "ppermute":
+            continue
+        axis = eqn.params.get("axis_name")
+        axis = axis[0] if isinstance(axis, (tuple, list)) else axis
+        g = ctx.axis_sizes.get(axis)
+        if g is None:
+            continue
+        out.extend(_ring_findings(eqn.params["perm"], g, path))
+    return out
+
+
+@rule("comm-restores-carrier", "invariants",
+      "every collective stage restores the carrier dtype after a "
+      "reduced-precision reduction (DESIGN.md §5)")
+def check_comm_restore(ctx: PlanContext):
+    out = []
+    prev_level = ctx.highest_level
+    for idx, s in ctx.expanded:
+        if s.kind in DATA_KINDS:
+            prev_level = s.level
+            continue
+        if s.kind != "psum":
+            continue
+        jx = ctx.trace_stage_group((s,), prev_level)
+        want = jnp.dtype(prec.real_dtype(prev_level))
+        for av in jx.out_avals:
+            got = jnp.dtype(av.dtype)
+            if got != want:
+                out.append(Finding(
+                    "comm-restores-carrier", ERROR,
+                    f"collective at comm level {s.level!r} returns the "
+                    f"carrier at {got.name} instead of restoring "
+                    f"{want.name} — every downstream stage silently "
+                    f"runs degraded (the PR-5 bug)",
+                    stage=idx))
+    return out

@@ -1,0 +1,163 @@
+"""Precision-flow pass: the declared dtype lattice vs the traced one.
+
+The paper's safety story is that every precision demotion is *declared*
+— a phase level in the :class:`PrecisionConfig`, a comm level on a
+collective, a tile level in a :class:`TileMap` — and priced by the
+eq.-(6) error model.  These rules check that the lowered plan computes
+exactly the lattice it declares: no silent output downgrades (the PR-5
+bug class), no stray f64 under x64 in a sub-double plan, no contraction
+accumulating below its declared stage level, reorders at the footnote-8
+level, tiles at or below their stage.
+
+Deliberate idioms the pass must NOT flag (and therefore exempts):
+
+* narrowing ``convert -> convert`` round trips — that is the tile/comm
+  *quantization* idiom, a declared rounding event (the invariants pass
+  handles the widening/no-op round trips);
+* host-side f64 control flow (tolerances, norms) — the pass only sees
+  the traced plan, where such values never appear;
+* solver dot products accumulating *above* the recurrence dtype
+  (``solvers.precision.accum_dtype``) — accumulating high is never a
+  downgrade, and those jaxprs are not plans.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import precision as prec
+
+from .context import DATA_KINDS, PlanContext, float_level
+from .findings import ERROR, WARNING, Finding
+from .rules import rule
+
+
+@rule("silent-output-downgrade", "precision-flow",
+      "traced output dtype must match the last data stage's declared "
+      "level (a lower dtype is the PR-5 silent-downgrade bug class)")
+def check_output_level(ctx: PlanContext):
+    declared = ctx.declared_output_level
+    want = prec.real_dtype(declared)
+    out = []
+    for av in ctx.out_avals:
+        got = getattr(av, "dtype", None)
+        if got is None or float_level(got) is None:
+            continue
+        lg, lw = float_level(got), float_level(jnp.dtype(want))
+        if lg < lw:
+            out.append(Finding(
+                "silent-output-downgrade", ERROR,
+                f"plan declares its output at level {declared!r} "
+                f"({jnp.dtype(want).name}) but the trace produces "
+                f"{jnp.dtype(got).name} — a downstream consumer silently "
+                f"loses precision",
+                detail=f"out aval {av}"))
+        elif lg > lw:
+            out.append(Finding(
+                "silent-output-downgrade", WARNING,
+                f"traced output dtype {jnp.dtype(got).name} sits above "
+                f"the declared level {declared!r} — an undeclared "
+                f"promotion wastes bandwidth and hides the contract",
+                detail=f"out aval {av}"))
+    return out
+
+
+@rule("x64-promotion", "precision-flow",
+      "a sub-double plan must not materialize non-weak f64 values under "
+      "x64 (Python-scalar promotion / dtype-less constructors)")
+def check_x64_promotion(ctx: PlanContext):
+    # PlanContext traces under enable_x64 regardless of the host flag,
+    # so the check is meaningful even from an x64-off process.
+    if ctx.highest_level == "d":
+        return []        # f64 is declared somewhere in the ladder
+    out = []
+    for eqn, _, path in ctx.eqns():
+        for v in eqn.outvars:
+            av = v.aval
+            if (getattr(av, "dtype", None) == jnp.float64
+                    and not getattr(av, "weak_type", False)):
+                out.append(Finding(
+                    "x64-promotion", ERROR,
+                    f"non-weak float64 value appears in a plan whose "
+                    f"highest declared level is "
+                    f"{ctx.highest_level!r} — a Python scalar or "
+                    f"dtype-less constructor promoted under x64",
+                    detail=f"{path} -> {av}"))
+                break        # one finding per eqn is enough
+    return out
+
+
+@rule("accum-below-stage", "precision-flow",
+      "contraction accumulator dtypes must not sit below the declared "
+      "gemv stage level (tiles may store low; sums may not)")
+def check_accum_level(ctx: PlanContext):
+    gemvs = ctx.stages("gemv")
+    if not gemvs:
+        return []
+    floor = min(prec.level_index(s.level) for _, s in gemvs)
+    out = []
+    for eqn, _, path in ctx.eqns():
+        if eqn.primitive.name not in ("dot_general", "dot"):
+            continue
+        av = eqn.outvars[0].aval
+        lv = float_level(getattr(av, "dtype", None))
+        if lv is not None and lv < floor:
+            out.append(Finding(
+                "accum-below-stage", ERROR,
+                f"contraction accumulates at "
+                f"{jnp.dtype(av.dtype).name}, below the lowest declared "
+                f"gemv level {('h', 's', 'd')[floor]!r} — per-tile "
+                f"storage may sit low, accumulation may not "
+                f"(DESIGN.md §8)",
+                detail=f"{path} -> {av}"))
+    return out
+
+
+@rule("reorder-level", "precision-flow",
+      "reorder stages run at the min of the adjacent compute levels "
+      "(paper footnote 8): lower silently downgrades, higher wastes")
+def check_reorder_level(ctx: PlanContext):
+    seq = [(i, s) for i, s in ctx.expanded if s.kind in DATA_KINDS]
+    out = []
+    for pos, (idx, s) in enumerate(seq):
+        if s.kind != "reorder" or pos == 0 or pos == len(seq) - 1:
+            continue
+        prev_l, next_l = seq[pos - 1][1].level, seq[pos + 1][1].level
+        want = prec.min_level(prev_l, next_l)
+        have = prec.level_index(s.level)
+        if have < prec.level_index(want):
+            out.append(Finding(
+                "reorder-level", ERROR,
+                f"reorder at level {s.level!r} sits below both adjacent "
+                f"compute levels ({prev_l!r}/{next_l!r}) — the memory "
+                f"stage silently rounds the carrier",
+                stage=idx))
+        elif have > prec.level_index(want):
+            out.append(Finding(
+                "reorder-level", WARNING,
+                f"reorder at level {s.level!r} above the adjacent "
+                f"compute min ({want!r}) — pure memory traffic at a "
+                f"precision nothing consumes",
+                stage=idx))
+    return out
+
+
+@rule("tile-above-stage", "precision-flow",
+      "TileMap levels must be min'd against the gemv stage level "
+      "(PrecisionConfig/TileMap.effective contract)")
+def check_tile_levels(ctx: PlanContext):
+    out = []
+    for idx, s in ctx.stages("gemv", "gemv_psum"):
+        if s.tile_map is None:
+            continue
+        cap = prec.level_index(s.level)
+        bad = sorted({lvl for row in s.tile_map.levels for lvl in row
+                      if prec.level_index(lvl) > cap})
+        if bad:
+            out.append(Finding(
+                "tile-above-stage", WARNING,
+                f"tile map carries level(s) {bad} above the gemv stage "
+                f"level {s.level!r} — tiles are stored above the compute "
+                f"precision; derive maps with TileMap.effective",
+                stage=idx))
+    return out

@@ -1,0 +1,156 @@
+"""Recompile-hazard pass: static arguments that blow up trace counts.
+
+Plans and :class:`ExecOpts` ride through ``jax.jit`` as *static*
+arguments (hashable frozen dataclasses) — that is the whole serving
+story: one trace per (plan, opts, shape) key, shared across requests
+(DESIGN.md §7, the ``TimingHarness`` trace counters).  Anything that
+breaks that contract retraces on every call and turns a microsecond
+dispatch into a multi-second compile:
+
+* an unhashable leaf smuggled into a stage (a list where a tuple
+  belongs, an array in a static field);
+* value-equal objects that do not hash equal (a ``__hash__`` that
+  disagrees with ``__eq__``), so every *rebuild* of the same config is
+  a fresh cache key;
+* a nondeterministic ``ExecOpts.resolve()`` (an unstable probe or
+  dispatch-table default would give each call site a different static
+  arg).
+
+These checks are static.  :func:`trace_stability` is the *executed*
+cross-check — it jits a callable, calls it twice, and reports a finding
+if the second identical call grew the jit cache; the test suite points
+it at a :class:`repro.core.timing.TimingHarness` applier to tie the
+static rules to the runtime counters.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import List
+
+import jax
+import numpy as np
+
+from .context import PlanContext
+from .findings import ERROR, Finding
+from .rules import rule
+
+_MUTABLE = (list, dict, set, bytearray, np.ndarray)
+
+
+def _mutable_leaves(value, path: str):
+    """Yield (path, type) for mutable/unhashable leaves inside a static
+    value (dataclasses descended field-wise, tuples element-wise)."""
+    if isinstance(value, _MUTABLE) or isinstance(value, jax.Array):
+        yield path, type(value).__name__
+        return
+    if dataclasses.is_dataclass(value) and not isinstance(value, type):
+        for f in dataclasses.fields(value):
+            yield from _mutable_leaves(getattr(value, f.name),
+                                       f"{path}.{f.name}")
+    elif isinstance(value, tuple):
+        for i, v in enumerate(value):
+            yield from _mutable_leaves(v, f"{path}[{i}]")
+
+
+@rule("static-unhashable", "recompile",
+      "plans and opts must hash (jit static-argument contract); every "
+      "mutable leaf is pinpointed")
+def check_hashable(ctx: PlanContext):
+    out: List[Finding] = []
+    for i, s in enumerate(ctx.plan):
+        for path, tname in _mutable_leaves(s, f"plan[{i}]"):
+            out.append(Finding(
+                "static-unhashable", ERROR,
+                f"mutable {tname} at {path} — the stage cannot be a jit "
+                f"static argument; every call would retrace (use a "
+                f"tuple / frozen value)",
+                stage=i, detail=path))
+    for path, tname in _mutable_leaves(ctx.opts, "opts"):
+        out.append(Finding(
+            "static-unhashable", ERROR,
+            f"mutable {tname} at {path} — ExecOpts must stay hashable",
+            detail=path))
+    if out:
+        return out
+    for label, value in (("plan", ctx.plan), ("opts", ctx.opts)):
+        try:
+            hash(value)
+        except TypeError as e:
+            out.append(Finding(
+                "static-unhashable", ERROR,
+                f"{label} is unhashable: {e}", detail=label))
+    return out
+
+
+@rule("hash-unstable", "recompile",
+      "value-equal plans/opts must hash equal — a rebuilt config may "
+      "never be a fresh jit cache key")
+def check_hash_stable(ctx: PlanContext):
+    out: List[Finding] = []
+    for label, value in (("plan", ctx.plan), ("opts", ctx.opts)):
+        try:
+            clone = copy.deepcopy(value)
+            if clone != value:
+                out.append(Finding(
+                    "hash-unstable", ERROR,
+                    f"a deep copy of the {label} does not compare equal "
+                    f"to the original — every rebuild retraces",
+                    detail=label))
+            elif hash(clone) != hash(value):
+                out.append(Finding(
+                    "hash-unstable", ERROR,
+                    f"value-equal {label} copies hash differently "
+                    f"(__hash__ disagrees with __eq__) — every rebuild "
+                    f"is a fresh jit cache key",
+                    detail=label))
+        except TypeError:
+            pass        # static-unhashable already reports this
+    return out
+
+
+@rule("resolve-deterministic", "recompile",
+      "ExecOpts.resolve() must be deterministic within a process — an "
+      "unstable probe gives each lowering a different static key")
+def check_resolve_deterministic(ctx: PlanContext):
+    try:
+        a = ctx.opts.resolve()
+        b = ctx.opts.resolve()
+    except Exception as e:
+        return [Finding(
+            "resolve-deterministic", ERROR,
+            f"ExecOpts.resolve() raised: {e}", detail=type(e).__name__)]
+    if a != b or a.spec.fingerprint() != b.spec.fingerprint():
+        return [Finding(
+            "resolve-deterministic", ERROR,
+            "two ExecOpts.resolve() calls disagree — backend probe or "
+            "dispatch-table default is nondeterministic, so every "
+            "lowering sees a different static argument",
+            detail=f"{a.spec.fingerprint()} vs {b.spec.fingerprint()}")]
+    return []
+
+
+def trace_stability(fn, *args, calls: int = 2,
+                    static_argnums=()) -> List[Finding]:
+    """EXECUTED cross-check (not a registered static rule): jit ``fn``,
+    call it ``calls`` times with the same arguments, and report a
+    finding if any call after the first grew the jit cache — the
+    runtime symptom every static rule above predicts.  Cross-check
+    against :class:`repro.core.timing.TimingHarness.n_traces` when the
+    callable comes from a harness.  ``static_argnums`` forwards to
+    ``jax.jit`` so plan/opts-style static arguments are keyed exactly
+    as the serving path keys them."""
+    jf = jax.jit(fn, static_argnums=static_argnums)
+    jf(*args)
+    baseline = jf._cache_size()
+    for _ in range(calls - 1):
+        jf(*args)
+    grown = jf._cache_size() - baseline
+    if grown:
+        return [Finding(
+            "retrace-on-identical-call", ERROR,
+            f"jit cache grew by {grown} on repeated identical calls — "
+            f"a static argument is unstable under hashing",
+            detail=f"cache {baseline} -> {baseline + grown}")]
+    return []

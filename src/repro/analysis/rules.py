@@ -1,0 +1,162 @@
+"""The declarative rule engine: registry, lint entry points, pytest glue.
+
+A rule is a named check over a :class:`~repro.analysis.context.PlanContext`
+returning zero or more :class:`~repro.analysis.findings.Finding`s.  Rules
+self-register at import through the :func:`rule` decorator; the three
+pass families (``precision-flow``, ``invariants``, ``recompile``) are
+just registry tags, so ``lint_plan(plan, opts, families=("invariants",))``
+runs one family and the default runs them all.
+
+Entry points:
+
+``lint_plan``        lint one lowered plan (traced abstractly, never
+                     executed) and return its findings.
+``assert_plan_clean``  pytest helper: raise with the formatted findings
+                     when the plan is not clean.
+``lint_callable``    trace an arbitrary callable and run jaxpr-scoped
+                     checks (primitive allow/block lists) — the
+                     generalized form of the old hand-rolled
+                     ``make_jaxpr`` assertions in the test suite.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.pipeline import ExecOpts, Plan
+
+from .context import PlanContext, iter_eqns, trace_callable
+from .findings import ERROR, Finding, errors, format_findings
+
+FAMILIES = ("precision-flow", "invariants", "recompile")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One registered check.
+
+    ``name``         stable identifier findings carry (kebab-case).
+    ``family``       one of :data:`FAMILIES`.
+    ``description``  one-liner for the catalog (DESIGN.md §11).
+    ``check``        ``PlanContext -> Iterable[Finding]``.
+    """
+
+    name: str
+    family: str
+    description: str
+    check: Callable[[PlanContext], Iterable[Finding]] = \
+        dataclasses.field(compare=False)
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def rule(name: str, family: str, description: str):
+    """Register a check function as a named rule (decorator)."""
+    if family not in FAMILIES:
+        raise ValueError(f"unknown rule family {family!r}")
+
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"duplicate rule name {name!r}")
+        _REGISTRY[name] = Rule(name, family, description, fn)
+        return fn
+
+    return deco
+
+
+def all_rules(families: Optional[Sequence[str]] = None,
+              names: Optional[Sequence[str]] = None) -> Tuple[Rule, ...]:
+    """The registered rules, optionally filtered by family and/or name."""
+    _load()
+    out = []
+    for r in _REGISTRY.values():
+        if families is not None and r.family not in families:
+            continue
+        if names is not None and r.name not in names:
+            continue
+        out.append(r)
+    if names is not None:
+        missing = set(names) - {r.name for r in out}
+        if missing:
+            raise KeyError(f"unknown rule(s): {sorted(missing)}")
+    return tuple(out)
+
+
+def _load():
+    # rule modules self-register on import; deferred to dodge the cycle
+    from . import invariants, precision_flow, recompile  # noqa: F401
+
+
+def lint_plan(plan: Plan, opts: Optional[ExecOpts] = None, *, N_t: int,
+              N_d: int, N_m: int, S: int = 1, rows: Optional[int] = None,
+              families: Optional[Sequence[str]] = None,
+              names: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Statically lint one lowered plan; returns its findings.
+
+    The plan is traced abstractly at the given dims (``ShapeDtypeStruct``
+    inputs through ``make_jaxpr`` — nothing executes, nothing
+    allocates), with mesh collectives bound to named vmap axes sized by
+    the plan's static ``groups``.  ``rows`` overrides the derived input
+    row count (square "G"-operand plans).  A plan that fails to *trace*
+    is itself reported as a ``trace-failure`` error finding.
+    """
+    ctx = PlanContext.from_plan(plan, opts, N_t=N_t, N_d=N_d, N_m=N_m,
+                                S=S, rows=rows)
+    findings: List[Finding] = []
+    for r in all_rules(families, names):
+        try:
+            findings.extend(r.check(ctx))
+        except Exception as e:  # a rule that cannot even run is a finding
+            findings.append(Finding(
+                "trace-failure", ERROR,
+                f"rule {r.name!r} could not inspect the plan: {e}",
+                detail=type(e).__name__))
+    findings.sort(key=lambda f: (f.severity != ERROR, f.rule,
+                                 f.stage if f.stage is not None else -1))
+    return findings
+
+
+def assert_plan_clean(plan: Plan, opts: Optional[ExecOpts] = None, *,
+                      allow_warnings: bool = False, **kw) -> None:
+    """Pytest helper: fail with the formatted findings unless the plan
+    lints clean (``allow_warnings=True`` tolerates warning-severity
+    findings)."""
+    found = lint_plan(plan, opts, **kw)
+    bad = errors(found) if allow_warnings else tuple(found)
+    assert not bad, "plan is not clean:\n" + format_findings(bad)
+
+
+def lint_callable(fn, args: Sequence, *,
+                  allowed: Optional[Iterable[str]] = None,
+                  forbidden: Optional[Iterable[str]] = None,
+                  name: str = "primitive-set") -> List[Finding]:
+    """Trace ``fn(*args)`` (args are arrays or ``ShapeDtypeStruct``s;
+    nothing executes) and check its primitives against an allowlist
+    and/or blocklist.  Sub-jaxprs are included.  This is the rule-engine
+    form of the suite's old hand-rolled jaxpr assertions."""
+    jx = trace_callable(fn, *args)
+    findings: List[Finding] = []
+    allowed = None if allowed is None else set(allowed)
+    forbidden = set() if forbidden is None else set(forbidden)
+    for eqn, _, path in iter_eqns(jx.jaxpr):
+        prim = eqn.primitive.name
+        if allowed is not None and prim not in allowed:
+            findings.append(Finding(
+                name, ERROR,
+                f"primitive {prim!r} is outside the allowed set "
+                f"{sorted(allowed)}", detail=path))
+        if prim in forbidden:
+            findings.append(Finding(
+                name, ERROR, f"forbidden primitive {prim!r} emitted",
+                detail=path))
+    return findings
+
+
+def rule_catalog() -> Tuple[Rule, ...]:
+    """Every registered rule, family-major — the basis of the DESIGN.md
+    §11 catalog and the CLI's ``--rules`` listing."""
+    _load()
+    return tuple(sorted(_REGISTRY.values(),
+                        key=lambda r: (FAMILIES.index(r.family), r.name)))

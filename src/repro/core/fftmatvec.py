@@ -348,14 +348,26 @@ class FFTMatvec:
                 "collective": self._collective_kind(psum_axes, adjoint),
                 "comm_level": self.comm_level}
 
+    # -- plan inspection --------------------------------------------------------
+    def plan(self, *, adjoint: bool = False) -> pipeline.Plan:
+        """The compiled matvec plan this operator executes: the
+        single-device stage list, or — on a mesh — the same plan plus its
+        collective stage (axes, static group sizes, collective kind and
+        comm level all bound).  This is exactly what :meth:`matvec` /
+        :meth:`rmatvec` run, exposed for stage-count verification and the
+        :mod:`repro.analysis` linter."""
+        if self.mesh is None:
+            return pipeline.matvec_plan(self.precision, adjoint=adjoint)
+        return pipeline.matvec_plan(self.precision, adjoint=adjoint,
+                                    **self._psum_args(adjoint))
+
     # -- the one apply path ----------------------------------------------------
     def _apply(self, x, *, adjoint: bool):
         """Run one compiled matvec plan — single-device directly, mesh via
         the same plan (plus its Psum stage) wrapped in ``shard_map``."""
-        cfg, opts, N_t, io_dtype = (self.precision, self.opts, self.N_t,
-                                    self.io_dtype)
+        opts, N_t, io_dtype = self.opts, self.N_t, self.io_dtype
+        plan = self.plan(adjoint=adjoint)
         if self.mesh is None:
-            plan = pipeline.matvec_plan(cfg, adjoint=adjoint)
             y = pipeline.run_plan(plan, x, {"F": (self.F_hat_re,
                                                   self.F_hat_im)},
                                   N_t=N_t, opts=opts)
@@ -365,8 +377,6 @@ class FFTMatvec:
         # F: input sharded over cols, reduce over cols, output over rows;
         # F*: roles swapped (psum over rows only when the grid has > 1 row).
         in_axis, out_axis = (row, col) if adjoint else (col, row)
-        plan = pipeline.matvec_plan(cfg, adjoint=adjoint,
-                                    **self._psum_args(adjoint))
 
         def body(F_re, F_im, x_loc):
             y = pipeline.run_plan(plan, x_loc, {"F": (F_re, F_im)},

@@ -127,11 +127,45 @@ class GramOperator:
                                 space=self.space, mode=self.mode)
 
     # -- plan inspection -------------------------------------------------------
+    def _mesh_roles(self):
+        """(io_axis, mid_axes, out_axes) of the mesh Gram pipeline."""
+        op = self.op
+        if self.space == "parameter":
+            # F then F*: the forward GEMM is partial over cols (mid psum),
+            # the adjoint GEMM partial over rows (final psum, p_r > 1 only).
+            return op._col, _as_axes(op.col_axis), _as_axes(op.row_axis)
+        # F* then F: roles swapped; the final psum over cols is always
+        # needed, the mid one only when the grid has > 1 row.
+        return op._row, _as_axes(op.row_axis), _as_axes(op.col_axis)
+
     def plan(self) -> pipeline.Plan:
-        """The compiled (single-device) stage plan — for stage-count
-        verification and debugging."""
+        """The compiled stage plan this operator executes: single-device,
+        or — on a mesh — the same pipeline with its mid and final
+        collective stages bound (axes, static group sizes, collective
+        kind and comm level).  Exactly what :meth:`apply` runs; exposed
+        for stage-count verification and the :mod:`repro.analysis`
+        linter."""
+        if self.mesh is None:
+            return pipeline.gram_plan(self.precision, space=self.space,
+                                      mode=self.mode)
+        op = self.op
+        _, mid_axes, out_axes = self._mesh_roles()
+
+        def axspec(axes):
+            return None if not axes else \
+                (axes[0] if len(axes) == 1 else axes)
+
+        sizes = op.mesh.shape
+        groups = lambda axes: tuple(sizes[a] for a in axes) or None
+        widest = mid_axes if len(mid_axes) >= len(out_axes) else out_axes
         return pipeline.gram_plan(self.precision, space=self.space,
-                                  mode=self.mode)
+                                  mode=self.mode,
+                                  mid_psum_axis=axspec(mid_axes),
+                                  psum_axis=axspec(out_axes),
+                                  mid_psum_groups=groups(mid_axes),
+                                  psum_groups=groups(out_axes),
+                                  collective=op._collective_kind(widest),
+                                  comm_level=op.comm_level)
 
     def stage_counts(self):
         """Static stage census of :meth:`plan`."""
@@ -157,32 +191,8 @@ class GramOperator:
 
         op = self.op
         row, col = op._row, op._col
-        if self.space == "parameter":
-            # F then F*: the forward GEMM is partial over cols (mid psum),
-            # the adjoint GEMM partial over rows (final psum, p_r > 1 only).
-            io_axis, mid_axes, out_axes = \
-                col, _as_axes(op.col_axis), _as_axes(op.row_axis)
-        else:
-            # F* then F: roles swapped; the final psum over cols is always
-            # needed, the mid one only when the grid has > 1 row.
-            io_axis, mid_axes, out_axes = \
-                row, _as_axes(op.row_axis), _as_axes(op.col_axis)
-
-        def axspec(axes):
-            return None if not axes else \
-                (axes[0] if len(axes) == 1 else axes)
-
-        sizes = op.mesh.shape
-        groups = lambda axes: tuple(sizes[a] for a in axes) or None
-        widest = mid_axes if len(mid_axes) >= len(out_axes) else out_axes
-        plan = pipeline.gram_plan(self.precision, space=self.space,
-                                  mode=self.mode,
-                                  mid_psum_axis=axspec(mid_axes),
-                                  psum_axis=axspec(out_axes),
-                                  mid_psum_groups=groups(mid_axes),
-                                  psum_groups=groups(out_axes),
-                                  collective=op._collective_kind(widest),
-                                  comm_level=op.comm_level)
+        io_axis, _, _ = self._mesh_roles()
+        plan = self.plan()
         N_t, opts, io_dtype = self.N_t, self.opts, self.io_dtype
         operands = self._operands
 

@@ -369,6 +369,17 @@ def _reduce_scatter_all_reduce(q, axes):
     return jax.lax.all_gather(q, minor, axis=0, tiled=True)
 
 
+def ring_permutation(g: int) -> Tuple[Tuple[int, int], ...]:
+    """The ring schedule over a group of ``g`` ranks: rank i forwards to
+    rank (i + 1) mod g.  A valid ring is a single Hamiltonian cycle —
+    every rank appears exactly once as a source and once as a
+    destination, and following the edges from rank 0 visits all g ranks
+    before returning.  :func:`_ring_all_reduce` builds its ``ppermute``
+    hops from this one helper so the schedule is inspectable (and
+    checkable) by :mod:`repro.analysis` instead of an inline literal."""
+    return tuple((i, (i + 1) % g) for i in range(g))
+
+
 def _ring_all_reduce(q, axes, groups):
     """All-reduce over the minor (fast) axis as an explicit ppermute ring:
     g-1 hops circulate the ORIGINAL local partials around the ring, then
@@ -388,7 +399,7 @@ def _ring_all_reduce(q, axes, groups):
     what ``calibrate_overlap`` measures rather than assumes)."""
     minor = axes[-1]
     g = groups[-1]
-    perm = [(i, (i + 1) % g) for i in range(g)]
+    perm = list(ring_permutation(g))
     parts, recv = [q], q
     for _ in range(g - 1):
         recv = jax.lax.ppermute(recv, minor, perm)

@@ -87,6 +87,18 @@ def default_input(op, variant: str = "matvec", *, n_rhs: int = 4,
     return v.astype(op.io_dtype)
 
 
+def _assert_op_clean(op) -> None:
+    """``lint=True`` pre-flight: statically lint the plans a candidate
+    operator would lower (abstract tracing, nothing executes) and raise
+    before any timing budget is spent on a contract-violating config."""
+    from repro import analysis  # deferred: tune must import without it
+    bad = analysis.errors(analysis.lint_operator(op))
+    if bad:
+        raise analysis.PlanLintError(
+            f"candidate config {op.precision.to_string()!r} failed "
+            f"static analysis:\n" + analysis.format_findings(bad), bad)
+
+
 def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
              variant: str = "matvec", harness: TimingHarness | None = None,
              repeats: int = 5, warmup: int = 2, mode: str = "throughput",
@@ -95,7 +107,8 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
              constants: dict | None = None, p_r: int | None = None,
              p_c: int | None = None, n_rhs: int = 4,
              seed: int = 0,
-             tiles: bool | tuple[int, int] | None = None) -> TuneResult:
+             tiles: bool | tuple[int, int] | None = None,
+             lint: bool = False) -> TuneResult:
     """Pick the fastest precision config of ``op`` meeting ``tol``.
 
     ``op`` should be the *highest-precision* operator (its stored Fourier
@@ -119,6 +132,14 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
     set — on a backend whose :class:`repro.backend.BackendSpec` gates
     tile precision off, refinement is skipped (the uniform search is
     unchanged).  Tile-enabled tunes cache under a ``;tiles=RxC`` key.
+
+    ``lint=True`` pre-flights every config that is about to be *timed*
+    (the baseline and each frontier survivor) through the static
+    analyzer (:func:`repro.analysis.lint_operator` — abstract tracing,
+    nothing executes) and raises
+    :class:`repro.analysis.PlanLintError` on any error-severity
+    finding, so a contract-violating lowering fails in milliseconds
+    instead of polluting the timed record set.
 
     Persistence is opt-in: pass ``cache`` (a :class:`TuningCache`) or
     ``cache_path``; hits answer any tolerance from stored measurements.
@@ -201,6 +222,8 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
 
     # 1. baseline: timing reference + error reference + fallback selection.
     base_op = op.with_precision(base_cfg)
+    if lint:
+        _assert_op_clean(base_op)
     ref_out, base_t = harness.time(base_op, v, variant)
     errors: dict[str, float] = {base_cfg.to_string(): 0.0}
 
@@ -270,7 +293,10 @@ def autotune(op, *, tol: float, v=None, ladder: Sequence[str] | None = None,
     #    would over the exhaustive sweep.
     records = [ConfigRecord(base_cfg, 0.0, base_t, 1.0)]
     for cfg in frontier:
-        _, t = harness.time(op.with_precision(cfg), v, variant)
+        cand = op.with_precision(cfg)
+        if lint:
+            _assert_op_clean(cand)
+        _, t = harness.time(cand, v, variant)
         records.append(ConfigRecord(cfg, errors[cfg.to_string()], t,
                                     base_t / t))
     best = optimal_config(records, tol)

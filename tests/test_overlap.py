@@ -391,15 +391,23 @@ def test_assemble_single_chunk_is_identity():
 
 def test_assemble_chunks_emits_no_zero_fill():
     """The micro-fix is observable in the jaxpr: assembly lowers to one
-    concatenate per plane with no broadcast-of-zeros buffer to overwrite."""
+    concatenate per plane with no broadcast-of-zeros buffer to overwrite.
+    Checked through the rule engine's allow/block lists — the same
+    primitive sets the linter's no-zero-fill-assembly rule enforces on
+    whole plans (repro.analysis.invariants)."""
+    from repro import analysis
+
     def assemble(a, b):
         return pipeline._assemble_chunks([a, b], 8, 1)
-    jaxpr = jax.make_jaxpr(assemble)(jnp.ones((4, 3)), jnp.ones((4, 3)))
-    prims = {eqn.primitive.name for eqn in jaxpr.jaxpr.eqns}
-    assert "concatenate" in prims
-    # the old path materialized zeros (broadcast_in_dim) and overwrote
-    # them chunk by chunk (dynamic_update_slice) — both must be gone
-    assert prims <= {"concatenate", "reshape"}
+
+    found = analysis.lint_callable(
+        assemble, (jnp.ones((4, 3)), jnp.ones((4, 3))),
+        allowed={"concatenate", "reshape"},
+        # the old path materialized zeros (broadcast_in_dim) and
+        # overwrote them chunk by chunk (dynamic_update_slice)
+        forbidden={"broadcast_in_dim", "dynamic_update_slice"},
+        name="assembly-primitives")
+    assert not found, analysis.format_findings(found)
 
 
 # ---------------------------------------------------------------------------
